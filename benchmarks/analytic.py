@@ -1,0 +1,216 @@
+"""Analytic roofline terms per (arch x shape x mesh) — first-principles
+napkin math over the planner's sharding decisions.
+
+Why analytic: XLA's HloCostAnalysis counts a while-loop body ONCE, and all
+our stacks scan over layers (plus inner chunk scans), so raw
+``cost_analysis()`` undercounts FLOPs/bytes by ~n_layers (verified in
+EXPERIMENTS.md §Dry-run). The compiled artifact is still used for the
+collective *schedule* (which collectives, group sizes) and the
+memory/compile proof; the three roofline terms below are exact closed
+forms over shapes, parallelism, and policy (remat, flash, compression).
+
+Conventions: bf16 params/activations (2 B), f32 grads/moments per config,
+causal attention = half the S^2 work, full remat = forward recompute in
+the backward (+2ND), MoE compute scaled by realized capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs import ArchConfig, ShapeConfig, get_arch, get_shape
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s/link
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_per_dev: float  # 6·N_active·D (train) / 2·N_active·D (inf)
+    notes: Dict[str, float]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        return max((self.t_compute, "compute"), (self.t_memory, "memory"),
+                   (self.t_collective, "collective"))[1]
+
+    @property
+    def step_time(self) -> float:
+        # lower bound: perfect overlap -> max; no overlap -> sum. We report
+        # the max (roofline) and track the sum in notes.
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        return (self.model_flops_per_dev / self.step_time / PEAK_FLOPS
+                if self.step_time > 0 else 0.0)
+
+
+def _moe_tokens_factor(cfg: ArchConfig) -> float:
+    """Dispatched-token multiple per MoE layer (top_k x capacity rounding)."""
+    return cfg.top_k * cfg.capacity_factor
+
+
+def analyze_cell(arch: str | ArchConfig, shape: str | ShapeConfig,
+                 mesh_devices: int, *, tp: int = 16,
+                 use_flash: bool = False, compression: str = "none",
+                 remat: Optional[str] = None,
+                 moe_strategy: Optional[str] = None,
+                 quantize_dispatch: bool = False, kv_int8: bool = False,
+                 capacity_factor: Optional[float] = None) -> RooflineTerms:
+    cfg = arch if isinstance(arch, ArchConfig) else get_arch(arch)
+    shp = shape if isinstance(shape, ShapeConfig) else get_shape(shape)
+    if capacity_factor is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    dp = mesh_devices // tp
+    a2a_elem = 1 if quantize_dispatch else BF16
+    remat = remat if remat is not None else (
+        cfg.remat if shp.kind == "train" else "none")
+    if moe_strategy is None:
+        moe_strategy = ("ep" if cfg.is_moe and cfg.n_experts % tp == 0
+                        else "tp" if cfg.is_moe else "none")
+
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    L_attn = cfg.n_attention_layers
+    N_total = cfg.param_count()
+    N_active = cfg.param_count(active_only=True)
+
+    B, S = shp.global_batch, shp.seq_len
+    if shp.kind == "decode":
+        tokens = B  # one new token per sequence
+    else:
+        tokens = B * S
+    tok_dev = tokens / dp  # model axis holds replicas of the token stream
+    notes: Dict[str, float] = {}
+
+    # ----------------------------------------------------------- FLOPs
+    if shp.kind == "train":
+        fwd_bwd = 6.0
+        if remat == "full":
+            fwd_bwd += 2.0  # forward recompute in backward
+        param_flops = fwd_bwd * N_active * tokens
+        if cfg.is_moe:
+            # capacity padding: dispatched slots beyond routed tokens are
+            # zero rows the MXU still multiplies
+            cap_waste = max(0.0, _moe_tokens_factor(cfg) - cfg.top_k)
+            moe_layers = sum(1 for i in range(L)
+                             if i % cfg.moe_period == cfg.moe_period - 1)
+            expert_p = (cfg.d_ff * d
+                        * (3 if cfg.activation in ("swiglu", "geglu") else 2))
+            param_flops += 2.0 * fwd_bwd * cap_waste * tokens * moe_layers \
+                * expert_p / 2  # 2 flops/MAC, halved: only FFN matmuls pad
+        # attention scores+values: 2 matmuls x 2 flops, causal half
+        attn_flops = fwd_bwd / 2 * 2.0 * 2.0 * B * S * S / 2 * L_attn * H * hd
+        model_flops = (6.0 * N_active * tokens
+                       + 3.0 * 2.0 * 2.0 * B * S * S / 2 * L_attn * H * hd / 2)
+    elif shp.kind == "prefill":
+        param_flops = 2.0 * N_active * tokens
+        attn_flops = 2.0 * 2.0 * B * S * S / 2 * L_attn * H * hd
+        model_flops = param_flops + attn_flops
+    else:  # decode
+        param_flops = 2.0 * N_active * tokens
+        attn_flops = 2.0 * 2.0 * B * S * L_attn * K * hd * (H // K)
+        model_flops = param_flops + attn_flops
+    flops = param_flops + attn_flops
+    notes["attn_flops_frac"] = attn_flops / max(flops, 1)
+
+    # ------------------------------------------------------- HBM bytes
+    p_local = N_total * BF16 / tp / (dp if cfg.fsdp else 1)
+    p_stream = N_total * BF16 / tp  # weights streamed through HBM per pass
+    if shp.kind == "train":
+        # fwd + bwd (+ remat fwd) weight reads + grad write/read
+        passes = 3 if remat == "full" else 2
+        w_bytes = passes * p_stream + 2 * N_total * F32 / tp / (dp if cfg.fsdp else 1)
+        mom_b = 2 if cfg.moment_dtype == "bfloat16" else 4
+        opt_bytes = N_total / tp / (dp if cfg.fsdp else 1) * (
+            2 * 2 * mom_b + 2 * BF16)  # m,v read+write, p read+write
+        # activations: ~c tensors of (tok, d) per layer, fwd + bwd(+remat)
+        c_layer = 14 if cfg.family != "ssm" else 24
+        act_bytes = (2.5 if remat == "full" else 2.0) * c_layer * L \
+            * tok_dev * d * BF16
+        # attention score traffic (materialized unless flash)
+        if not use_flash and L_attn:
+            act_bytes += 3.0 * (B / dp) * (H / tp) * S * S * F32 * L_attn
+            notes["scores_bytes_frac"] = 1.0
+        hbm = w_bytes + opt_bytes + act_bytes
+    elif shp.kind == "prefill":
+        act_bytes = 10 * L * tok_dev * d * BF16
+        if not use_flash and L_attn:
+            act_bytes += (B / dp) * (H / tp) * S * S * F32 * L_attn
+        hbm = p_stream + act_bytes
+    else:  # decode: weights + whole KV cache (or recurrent state) per token
+        kv_elem = (1 + 4.0 / hd) if kv_int8 else BF16
+        kv_bytes_global = 2 * L_attn * B * S * K * hd * kv_elem
+        state_bytes = 0.0
+        if cfg.family in ("ssm", "hybrid"):
+            di = cfg.ssm_expand * d
+            n_rec = L - L_attn
+            state_bytes = n_rec * B * di * cfg.d_state * F32 * 2
+        # KV sharded over the full mesh (heads or sequence per the planner)
+        hbm = p_stream + (kv_bytes_global + state_bytes) / mesh_devices
+
+    # ------------------------------------------------- collective bytes
+    coll = 0.0
+    if shp.kind == "train":
+        g_elem = 1 if compression == "int8" else F32
+        n_grad = N_total / tp
+        if cfg.fsdp:
+            # reduce-scatter grads + all-gather params (fwd & bwd re-gather)
+            coll += n_grad * g_elem * (dp - 1) / dp  # RS
+            coll += 2 * N_total * BF16 / tp * (dp - 1) / dp  # AG x2 passes
+        else:
+            coll += 2 * n_grad * g_elem * (dp - 1) / dp  # all-reduce ring
+        # TP: 2 all-reduces per layer fwd, 2 bwd, on (tok_dev, d) activations
+        ar = tok_dev * d * BF16 * 2 * (tp - 1) / tp
+        coll += 4 * L * ar
+        # vocab-sharded embedding + logits all-reduce (fwd+bwd)
+        coll += 4 * tok_dev * d * BF16 * (tp - 1) / tp
+        if cfg.is_moe and moe_strategy == "ep":
+            moe_layers = sum(1 for i in range(L)
+                             if i % cfg.moe_period == cfg.moe_period - 1)
+            a2a = tok_dev * _moe_tokens_factor(cfg) * d * a2a_elem \
+                * (tp - 1) / tp
+            coll += moe_layers * 4 * a2a  # dispatch+combine, fwd+bwd
+    elif shp.kind == "prefill":
+        coll += 2 * L * tok_dev * d * BF16 * 2 * (tp - 1) / tp
+        coll += 2 * tok_dev * d * BF16 * (tp - 1) / tp
+        if cfg.is_moe and moe_strategy == "ep":
+            moe_layers = sum(1 for i in range(L)
+                             if i % cfg.moe_period == cfg.moe_period - 1)
+            coll += moe_layers * 2 * tok_dev * _moe_tokens_factor(cfg) \
+                * d * a2a_elem * (tp - 1) / tp
+    else:  # decode
+        coll += 2 * L * tok_dev * d * BF16 * 2 * (tp - 1) / tp
+        coll += tok_dev * d * BF16 * (tp - 1) / tp
+        if K < tp:  # sequence-sharded KV: LSE combine per attn layer
+            coll += L_attn * tok_dev * H * hd * F32 * 2 * (tp - 1) / tp
+
+    return RooflineTerms(flops_per_dev=flops / mesh_devices,
+                         hbm_bytes_per_dev=hbm,
+                         coll_bytes_per_dev=coll,
+                         model_flops_per_dev=model_flops / mesh_devices,
+                         notes=notes)
+
+
+def not_shardable_kv(cfg: ArchConfig, tp: int) -> bool:
+    return cfg.n_kv_heads % tp != 0

@@ -1,0 +1,54 @@
+"""Kernel-level benchmark: the flash (online-softmax, O(S) memory) path vs
+materialized-scores attention, measured as jitted jnp on CPU — the
+algorithmic memory-traffic difference the Pallas kernel encodes; plus the
+chunked-vs-full SSM scan. Pallas interpret mode is for correctness, not
+speed, so kernels themselves are validated in tests and their roofline
+impact is measured by the dry-run (see §Perf)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced_config
+from repro.models.attention import chunked_attention, full_attention
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def run(S=2048, B=1, H=4, K=2, hd=64):
+    cfg = reduced_config(get_arch("phi3_mini"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_heads=H, n_kv_heads=K, head_dim=hd)
+    rng = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, K, hd), jnp.float32)
+
+    full = jax.jit(lambda q, k, v: full_attention(cfg, q, k, v, True))
+    chunked = jax.jit(
+        lambda q, k, v: chunked_attention(cfg, q, k, v, True, chunk=256))
+    t_full = _time(lambda: full(q, k, v))
+    t_chunk = _time(lambda: chunked(q, k, v))
+    scores_bytes = B * H * S * S * 4
+    flash_bytes = (q.nbytes + k.nbytes + v.nbytes) * 2
+    return [
+        ("attn_full_S2048", t_full * 1e6,
+         f"scores_bytes={scores_bytes}"),
+        ("attn_chunked_S2048", t_chunk * 1e6,
+         f"traffic_ratio={scores_bytes/flash_bytes:.1f}x "
+         f"wall_ratio={t_full/t_chunk:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

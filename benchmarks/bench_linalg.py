@@ -1,0 +1,77 @@
+"""Paper Table 2 — lilLinAlg: Gram matrix, least squares, nearest neighbor.
+
+We cannot run Spark/SystemML/SciDB; the algorithmically-equivalent axes we
+CAN measure on CPU (per DESIGN.md §7):
+  * vectorized engine (optimized TCAP) vs the volcano record-at-a-time
+    interpreter (the execution model the paper's targets descend from);
+  * optimized vs unoptimized TCAP plan;
+  * raw numpy as the oracle + floor.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps.linalg import LinAlgSession
+from repro.core.executor import Executor, NaiveExecutor
+from repro.objectmodel import PagedStore
+
+
+def _time(fn, reps=1):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(n=4096, dims=(8, 32), block=64, volcano_n=512):
+    rows = []
+    rng = np.random.default_rng(0)
+    for d in dims:
+        X = rng.normal(size=(n, d))
+        y = X @ rng.normal(size=(d, 1))
+
+        # --- gram ---
+        s = LinAlgSession(block_size=block)
+        s.load("X", X)
+        t_eng, _ = _time(lambda: s.run("G = X '* X"))
+        t_np, G_np = _time(lambda: X.T @ X)
+        np.testing.assert_allclose(s.fetch(s.vars["G"]), G_np, rtol=1e-8)
+        # volcano on a smaller slice (it is orders slower), scaled up
+        sv = LinAlgSession(block_size=block)
+        sv.ex = NaiveExecutor(sv.store, num_partitions=4)
+        sv.load("Xs", X[:volcano_n])
+        t_vol, _ = _time(lambda: sv.run("Gs = Xs '* Xs"))
+        t_vol_scaled = t_vol * (n / volcano_n)
+        rows.append((f"linalg_gram_d{d}", t_eng * 1e6,
+                     f"volcano_scaled={t_vol_scaled*1e6:.0f}us "
+                     f"speedup={t_vol_scaled/t_eng:.1f}x numpy={t_np*1e6:.0f}us"))
+
+        # --- least squares ---
+        s.load("y", y)
+        t_lsq, _ = _time(
+            lambda: s.run("beta = ( X '* X )^-1 %*% ( X '* y )"))
+        beta = s.fetch(s.vars["beta"])
+        t_np_lsq, beta_np = _time(
+            lambda: np.linalg.inv(X.T @ X) @ (X.T @ y))
+        np.testing.assert_allclose(beta, beta_np, rtol=1e-6, atol=1e-8)
+        rows.append((f"linalg_lsq_d{d}", t_lsq * 1e6,
+                     f"numpy={t_np_lsq*1e6:.0f}us"))
+
+        # --- nearest neighbor (Riemannian metric) ---
+        A = np.eye(d)
+        q = X[n // 2]
+        t_nn, (idx, _) = _time(
+            lambda: s.nearest_neighbor(s.vars["X"], A, q, k=1))
+        assert idx[0] == n // 2
+        d2 = np.einsum("nd,df,nf->n", X - q, A, X - q)
+        t_np_nn, _ = _time(lambda: d2.argmin())
+        rows.append((f"linalg_nn_d{d}", t_nn * 1e6,
+                     f"numpy={t_np_nn*1e6:.0f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,96 @@
+"""Roofline analysis (assignment §ROOFLINE), per (arch x shape x mesh):
+
+    compute term    = FLOPs_per_device / 197e12   (bf16 peak, v5e)
+    memory term     = HBM_bytes_per_device / 819e9
+    collective term = moved_bytes_per_device / 50e9 (ICI per link)
+
+Terms come from the analytic model (benchmarks/analytic.py) because XLA's
+HloCostAnalysis counts scan (while-loop) bodies once and therefore
+undercounts every layer-scanned stack by ~n_layers — the raw
+``cost_analysis()`` numbers are reported alongside as the measured
+*loop-body* cost, and the compiled HLO supplies the actual collective
+schedule (op kinds + group sizes) per cell. Emits markdown + CSV rows;
+EXPERIMENTS.md §Roofline embeds the table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.analytic import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms,
+                                 analyze_cell)
+
+
+def load_records(art_dir: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def analyze(rec: Dict, **kw) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    terms = analyze_cell(rec["arch"], rec["shape"], rec["devices"], **kw)
+    coll_sched = ",".join(f"{k}:{int(v['count'])}"
+                          for k, v in sorted(rec.get("collectives",
+                                                     {}).items()))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "devices": rec["devices"],
+        "t_compute": terms.t_compute, "t_memory": terms.t_memory,
+        "t_collective": terms.t_collective, "dominant": terms.dominant,
+        "mfu": terms.mfu,
+        "useful_ratio": terms.model_flops_per_dev / max(terms.flops_per_dev,
+                                                        1.0),
+        "hlo_body_flops": rec.get("flops_per_device"),
+        "hlo_collectives": coll_sched,
+        "state_gib": rec.get("analytic_state_bytes_per_device", 0) / 2**30,
+        "plan": rec.get("plan", {}),
+    }
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+           "| dominant | 6ND/total | roofline MFU | state GiB/dev "
+           "| HLO collective schedule |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mfu']*100:.1f}% "
+            f"| {r['state_gib']:.2f} | {r['hlo_collectives'] or '-'} |")
+    return "\n".join(lines)
+
+
+def run(art_dir: str = "artifacts/dryrun",
+        out_md: str = "artifacts/roofline.md", **kw):
+    rows = []
+    for rec in load_records(art_dir):
+        a = analyze(rec, **kw)
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    md = to_markdown(rows)
+    if out_md:
+        os.makedirs(os.path.dirname(out_md), exist_ok=True)
+        with open(out_md, "w") as f:
+            f.write(md + "\n")
+    out = []
+    for r in rows:
+        out.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                    max(r["t_compute"], r["t_memory"],
+                        r["t_collective"]) * 1e6,
+                    f"dominant={r['dominant']} mfu={r['mfu']*100:.1f}%"))
+    return out, rows
+
+
+if __name__ == "__main__":
+    recs, rows = run()
+    print(to_markdown(rows))

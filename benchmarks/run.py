@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one entry per paper table/figure. Prints
+``name,us_per_call,derived`` CSV.
+
+  Table 2  -> bench_linalg       (lilLinAlg: gram / lsq / NN)
+  Table 3  -> bench_oo           (TPC-H objects: cps / top-k Jaccard)
+  Tables 4-6 -> bench_ml         (LDA / GMM / k-means per iteration)
+  §8.4/T8  -> bench_objectmodel  (zero-copy movement)
+  kernels  -> bench_kernels      (flash vs materialized attention)
+  §Roofline -> roofline          (from dry-run artifacts, if present)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_linalg, bench_ml, bench_oo,
+                            bench_objectmodel)
+    suites = [
+        ("linalg", bench_linalg.run),
+        ("oo", bench_oo.run),
+        ("ml", bench_ml.run),
+        ("objectmodel", bench_objectmodel.run),
+        ("kernels", bench_kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    try:
+        from benchmarks import roofline
+        rows, _ = roofline.run()
+        for row in rows:
+            print(",".join(str(x) for x in row), flush=True)
+    except Exception as e:
+        print(f"roofline_SKIPPED,0,{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""The paper's ML benchmarks as reusable tools (§8.5): k-means (Appendix A
+AggregateComp), GMM-EM, and word-based LDA Gibbs — all on the declarative
+engine.
+
+Run:  PYTHONPATH=src python examples/ml_tools.py
+"""
+import numpy as np
+
+from repro.apps import GMM, KMeans, LDAGibbs
+from repro.data.synthetic import lda_triples, points
+
+x, labels = points(8000, 16, n_clusters=5, seed=0)
+
+cents = KMeans(5, iters=10).fit(x)
+print(f"k-means: 5 centroids over {len(x)} points, "
+      f"spread {np.linalg.norm(cents.std(0)):.2f}")
+
+mu, var, pi = GMM(5, iters=6).fit(x[:4000])
+print(f"GMM-EM:  mixture weights {np.round(np.sort(pi), 3).tolist()}")
+
+tri = lda_triples(300, vocab=400, avg_words=60, seed=1)
+theta, phi = LDAGibbs(10, 400, iters=3).fit(tri, 300)
+top_words = np.argsort(-phi, axis=1)[:, :5]
+print(f"LDA:     {len(tri)} (doc,word,count) triples, 10 topics; "
+      f"topic-0 top words: {top_words[0].tolist()}")

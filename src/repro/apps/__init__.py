@@ -1,0 +1,9 @@
+"""Library-style tools built ON the platform (the paper's raison d'être):
+lilLinAlg (distributed linear algebra + DSL), the ML kit (k-means, GMM,
+LDA), and the TPC-H object analytics."""
+from repro.apps.linalg import BlockMatrix, LinAlgSession
+from repro.apps.ml import GMM, KMeans, LDAGibbs
+from repro.apps.tpch import customers_per_supplier, load_tpch, topk_jaccard
+
+__all__ = ["BlockMatrix", "LinAlgSession", "GMM", "KMeans", "LDAGibbs",
+           "customers_per_supplier", "load_tpch", "topk_jaccard"]

@@ -1,0 +1,238 @@
+"""lilLinAlg — the paper's distributed linear-algebra tool (§8.3), built on
+the Computation API exactly as described: a distributed matrix is a set of
+MatrixBlock records on pages; multiply is a JoinComp (join on the inner
+block index) feeding an AggregateComp (sum of block products); a tiny
+Matlab-like DSL ( X'*X , %*% , ^-1 , + , - ) compiles to a Computation
+graph. Small results (e.g. Gram matrices of the feature dimension) are
+inverted on the driver, as lilLinAlg does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (AggregateComp, Computation, Executor, JoinComp,
+                        ScanSet, TopKComp, WriteSet, make_lambda,
+                        make_lambda_from_member)
+from repro.objectmodel import PagedStore
+
+__all__ = ["BlockMatrix", "LinAlgSession"]
+
+_set_counter = [0]
+
+
+def _block_dtype(bs: int) -> np.dtype:
+    return np.dtype([("r", np.int64), ("c", np.int64),
+                     ("data", np.float64, (bs, bs))])
+
+
+@dataclasses.dataclass
+class BlockMatrix:
+    """A matrix chunked into bs x bs MatrixBlock records stored on pages."""
+    set_name: str
+    rows: int
+    cols: int
+    bs: int
+
+    @property
+    def block_grid(self) -> Tuple[int, int]:
+        return (-(-self.rows // self.bs), -(-self.cols // self.bs))
+
+
+class LinAlgSession:
+    def __init__(self, store: Optional[PagedStore] = None,
+                 num_partitions: int = 4, block_size: int = 128,
+                 do_optimize: bool = True):
+        self.store = store or PagedStore()
+        self.ex = Executor(self.store, num_partitions=num_partitions,
+                           do_optimize=do_optimize)
+        self.bs = block_size
+        self.vars: Dict[str, BlockMatrix] = {}
+
+    # ------------------------------------------------------------- I/O
+    def load(self, name: str, a: np.ndarray) -> BlockMatrix:
+        bs = self.bs
+        n, m = a.shape
+        gr, gc = -(-n // bs), -(-m // bs)
+        recs = np.zeros(gr * gc, _block_dtype(bs))
+        idx = 0
+        for i in range(gr):
+            for j in range(gc):
+                blk = np.zeros((bs, bs))
+                chunk = a[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
+                blk[: chunk.shape[0], : chunk.shape[1]] = chunk
+                recs[idx] = (i, j, blk)
+                idx += 1
+        _set_counter[0] += 1
+        sname = f"{name}_{_set_counter[0]}"
+        self.store.send_data(sname, recs)
+        mat = BlockMatrix(sname, n, m, bs)
+        self.vars[name] = mat
+        return mat
+
+    def fetch(self, m: BlockMatrix) -> np.ndarray:
+        recs = self.store.get_set(m.set_name).all_records()
+        bs = m.bs
+        gr, gc = m.block_grid
+        out = np.zeros((gr * bs, gc * bs))
+        for rec in recs:
+            out[rec["r"] * bs:(rec["r"] + 1) * bs,
+                rec["c"] * bs:(rec["c"] + 1) * bs] = rec["data"]
+        return out[: m.rows, : m.cols]
+
+    # ------------------------------------------------ engine operations
+    def _matmul(self, A: BlockMatrix, B: BlockMatrix,
+                ta: bool = False) -> BlockMatrix:
+        """A @ B (or A.T @ B when ta): JoinComp + AggregateComp, the
+        paper's LAMultiplyJoin / LAMultiplyAggregate pair."""
+        bs = A.bs
+        # join key: A's inner index vs B's row index
+        inner_att = "r" if ta else "c"
+        out_att = "c" if ta else "r"
+        pair_dt = np.dtype([("key", np.int64),
+                            ("data", np.float64, (bs, bs))])
+
+        class MulJoin(JoinComp):
+            def __init__(self):
+                super().__init__(arity=2)
+
+            def get_selection(self, a, b):
+                return (make_lambda_from_member(a, inner_att)
+                        == make_lambda_from_member(b, "r"))
+
+            def get_projection(self, a, b):
+                def mul(ar, br):
+                    out = np.zeros(len(ar), pair_dt)
+                    lhs = ar["data"]
+                    if ta:
+                        lhs = lhs.transpose(0, 2, 1)
+                    out["data"] = np.matmul(lhs, br["data"])
+                    out["key"] = ar[out_att] * (1 << 20) + br["c"]
+                    return out
+                return make_lambda([a, b], mul, "blockMultiply")
+
+        class MulAgg(AggregateComp):
+            def get_key_projection(self, arg):
+                return make_lambda_from_member(arg, "key")
+
+            def get_value_projection(self, arg):
+                return make_lambda(
+                    arg, lambda r: r["data"].reshape(len(r), -1), "flat")
+
+        j = MulJoin()
+        j.set_input(0, ScanSet("db", A.set_name, f"Blk_{A.set_name}"))
+        j.set_input(1, ScanSet("db", B.set_name, f"Blk_{B.set_name}"))
+        agg = MulAgg()
+        agg.set_input(j)
+        _set_counter[0] += 1
+        out_name = f"mm_{_set_counter[0]}"
+        w = WriteSet("db", out_name)
+        w.set_input(agg)
+        r = self.ex.execute(w)
+        keys = np.asarray(r["key"])
+        vals = np.asarray(r["value"])
+        recs = np.zeros(len(keys), _block_dtype(bs))
+        recs["r"] = keys >> 20
+        recs["c"] = keys & ((1 << 20) - 1)
+        recs["data"] = vals.reshape(-1, bs, bs)
+        self.store.send_data(out_name, recs)
+        rows = A.cols if ta else A.rows
+        return BlockMatrix(out_name, rows, B.cols, bs)
+
+    def matmul(self, A, B):
+        return self._matmul(A, B, ta=False)
+
+    def transpose_multiply(self, A, B):
+        return self._matmul(A, B, ta=True)
+
+    def inverse(self, A: BlockMatrix) -> BlockMatrix:
+        dense = self.fetch(A)  # small driver-side result (paper's pattern)
+        inv = np.linalg.inv(dense)
+        return self.load(f"inv_{A.set_name}", inv)
+
+    def add(self, A: BlockMatrix, B: BlockMatrix, sign: float = 1.0
+            ) -> BlockMatrix:
+        a, b = self.fetch(A), self.fetch(B)
+        return self.load(f"add_{A.set_name}", a + sign * b)
+
+    def nearest_neighbor(self, X: BlockMatrix, Am: np.ndarray,
+                         xq: np.ndarray, k: int = 1):
+        """argmin_i (x_i - x')^T A (x_i - x') via a TopKComp (paper §8.3)."""
+        dim = X.cols
+        row_dt = np.dtype([("idx", np.int64), ("x", np.float64, (dim,))])
+        dense = self.fetch(X)
+        recs = np.zeros(len(dense), row_dt)
+        recs["idx"] = np.arange(len(dense))
+        recs["x"] = dense
+        _set_counter[0] += 1
+        sname = f"rows_{_set_counter[0]}"
+        self.store.send_data(sname, recs)
+
+        class NN(TopKComp):
+            def get_score(self, arg):
+                def score(rows):
+                    d = rows["x"] - xq
+                    return -np.einsum("nd,df,nf->n", d, Am, d)
+                return make_lambda(arg, score, "negMahalanobis")
+
+            def get_payload(self, arg):
+                return make_lambda_from_member(arg, "idx")
+
+        t = NN(k)
+        t.set_input(ScanSet("db", sname, "Row"))
+        w = WriteSet("db", f"nn_{sname}")
+        w.set_input(t)
+        r = self.ex.execute(w)
+        return np.asarray(r["payload"]), -np.asarray(r["score"])
+
+    # --------------------------------------------------------------- DSL
+    def run(self, script: str) -> Dict[str, BlockMatrix]:
+        """Matlab-like DSL: ``beta = (X '* X)^-1 %*% (X '* y)``."""
+        for line in script.strip().splitlines():
+            line = line.strip().rstrip(";")
+            if not line or line.startswith("#"):
+                continue
+            name, expr = (s.strip() for s in line.split("=", 1))
+            self.vars[name] = self._eval(_tokenize(expr))
+        return self.vars
+
+    def _eval(self, tokens: List[str]) -> BlockMatrix:
+        out, pos = self._parse(tokens, 0)
+        if pos != len(tokens):
+            raise SyntaxError(f"trailing tokens: {tokens[pos:]}")
+        return out
+
+    def _parse(self, t: List[str], i: int) -> Tuple[BlockMatrix, int]:
+        lhs, i = self._parse_atom(t, i)
+        while i < len(t) and t[i] in ("'*", "%*%", "+", "-"):
+            op = t[i]
+            rhs, i = self._parse_atom(t, i + 1)
+            if op == "'*":
+                lhs = self.transpose_multiply(lhs, rhs)
+            elif op == "%*%":
+                lhs = self.matmul(lhs, rhs)
+            elif op == "+":
+                lhs = self.add(lhs, rhs, 1.0)
+            else:
+                lhs = self.add(lhs, rhs, -1.0)
+        return lhs, i
+
+    def _parse_atom(self, t: List[str], i: int) -> Tuple[BlockMatrix, int]:
+        if t[i] == "(":
+            inner, i = self._parse(t, i + 1)
+            assert t[i] == ")", t[i:]
+            i += 1
+        else:
+            inner = self.vars[t[i]]
+            i += 1
+        while i < len(t) and t[i] == "^-1":
+            inner = self.inverse(inner)
+            i += 1
+        return inner, i
+
+
+def _tokenize(expr: str) -> List[str]:
+    return re.findall(r"'\*|%\*%|\^-1|[()+\-]|[A-Za-z_]\w*", expr)

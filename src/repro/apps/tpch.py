@@ -1,0 +1,129 @@
+"""The paper's big-object analytics (§8.4) over denormalized TPC-H:
+
+* customers-per-supplier — for each supplier, the map customer -> parts
+  sold (MultiSelection-equivalent flatten + two-stage aggregation);
+* top-k Jaccard — customers whose purchased-part set is most similar to a
+  query set (the TopJaccard pattern).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (AggregateComp, Executor, ScanSet, TopKComp, WriteSet,
+                        make_lambda, make_lambda_from_member)
+from repro.objectmodel import PagedStore
+
+__all__ = ["customers_per_supplier", "topk_jaccard", "load_tpch"]
+
+_uid = [0]
+
+
+def _fresh(s):
+    _uid[0] += 1
+    return f"{s}_{_uid[0]}"
+
+
+def load_tpch(store: PagedStore, customers: np.ndarray,
+              lineitems: np.ndarray) -> Tuple[str, str]:
+    cn, ln = _fresh("customers"), _fresh("lineitems")
+    store.send_data(cn, customers)
+    store.send_data(ln, lineitems)
+    return cn, ln
+
+
+def customers_per_supplier(store: PagedStore, lineitems_set: str,
+                           n_parts: int, num_partitions: int = 4,
+                           executor_cls=Executor) -> Dict[int, np.ndarray]:
+    """supplier -> sorted unique (custkey, partkey) pairs sold.
+
+    One two-stage aggregation keyed by supplier; values are per-(cust,part)
+    presence vectors encoded sparsely via bit-packing over part ids."""
+
+    class PerSupplier(AggregateComp):
+        def __init__(self):
+            super().__init__(combiner="max")  # presence (set union)
+
+        def get_key_projection(self, arg):
+            def key(rows):
+                return rows["suppkey"] * (1 << 24) + rows["custkey"]
+            return make_lambda(arg, key, "suppCust")
+
+        def get_value_projection(self, arg):
+            def val(rows):
+                out = np.zeros((len(rows), n_parts), np.int8)
+                out[np.arange(len(rows)), rows["partkey"]] = 1
+                return out
+            return make_lambda(arg, val, "partSet")
+
+    agg = PerSupplier()
+    agg.set_input(ScanSet("db", lineitems_set, "Lineitem"))
+    w = WriteSet("db", _fresh("cps"))
+    w.set_input(agg)
+    ex = executor_cls(store, num_partitions=num_partitions)
+    r = ex.execute(w)
+    out: Dict[int, Dict[int, np.ndarray]] = {}
+    for key, vec in zip(np.asarray(r["key"]), np.asarray(r["value"])):
+        supp, cust = int(key) >> 24, int(key) & ((1 << 24) - 1)
+        out.setdefault(supp, {})[cust] = np.nonzero(vec)[0]
+    return out
+
+
+def topk_jaccard(store: PagedStore, lineitems_set: str, n_parts: int,
+                 query_parts: np.ndarray, k: int,
+                 num_partitions: int = 4, executor_cls=Executor):
+    """Top-k customers by Jaccard(parts bought, query set). Two phases, as
+    in the paper: build each customer's unique part set (aggregation),
+    then a TopKComp over the per-customer sets."""
+
+    class PartSets(AggregateComp):
+        def __init__(self):
+            super().__init__(combiner="max")
+
+        def get_key_projection(self, arg):
+            return make_lambda_from_member(arg, "custkey")
+
+        def get_value_projection(self, arg):
+            def val(rows):
+                out = np.zeros((len(rows), n_parts), np.int8)
+                out[np.arange(len(rows)), rows["partkey"]] = 1
+                return out
+            return make_lambda(arg, val, "partSet")
+
+    agg = PartSets()
+    agg.set_input(ScanSet("db", lineitems_set, "Lineitem"))
+    w = WriteSet("db", _fresh("psets"))
+    w.set_input(agg)
+    ex = executor_cls(store, num_partitions=num_partitions)
+    r = ex.execute(w)
+    custs = np.asarray(r["key"])
+    sets = np.asarray(r["value"])  # (n_cust, n_parts) 0/1
+
+    qvec = np.zeros(n_parts, np.int8)
+    qvec[query_parts] = 1
+    set_dt = np.dtype([("custkey", np.int64),
+                       ("parts", np.int8, (n_parts,))])
+    recs = np.zeros(len(custs), set_dt)
+    recs["custkey"] = custs
+    recs["parts"] = sets
+    sname = _fresh("custsets")
+    store.send_data(sname, recs)
+
+    class TopJaccard(TopKComp):
+        def get_score(self, arg):
+            def score(rows):
+                inter = (rows["parts"] & qvec).sum(1)
+                union = (rows["parts"] | qvec).sum(1)
+                return inter / np.maximum(union, 1)
+            return make_lambda(arg, score, "jaccard")
+
+        def get_payload(self, arg):
+            return make_lambda_from_member(arg, "custkey")
+
+    t = TopJaccard(k)
+    t.set_input(ScanSet("db", sname, "CustSet"))
+    w2 = WriteSet("db", _fresh("topk"))
+    w2.set_input(t)
+    r2 = executor_cls(store, num_partitions=num_partitions).execute(w2)
+    return np.asarray(r2["payload"]), np.asarray(r2["score"])

@@ -1,0 +1,158 @@
+"""The PC Computation toolkit (paper §4): SelectionComp, JoinComp,
+AggregateComp, MultiSelectionComp, plus set readers/writers.
+
+A user builds a *graph* of Computations; each exposes lambda-term
+construction functions that the TCAP compiler calls with placeholder
+arguments. The user never touches the data inside these functions — they
+construct the computation, they do not run it.
+"""
+from __future__ import annotations
+
+import abc
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lambdas import LambdaArg, LambdaTerm
+
+__all__ = ["Computation", "ScanSet", "WriteSet", "SelectionComp",
+           "MultiSelectionComp", "JoinComp", "AggregateComp", "TopKComp"]
+
+_comp_ids = itertools.count(1)
+
+
+class Computation(abc.ABC):
+    """Base of the computation graph. ``set_input`` wires the DAG."""
+
+    arity = 1
+
+    def __init__(self, name: Optional[str] = None):
+        self.comp_id = next(_comp_ids)
+        self.name = name or f"{type(self).__name__}_{self.comp_id}"
+        self.inputs: List[Optional["Computation"]] = [None] * self.arity
+
+    def set_input(self, i_or_comp, comp: Optional["Computation"] = None):
+        if comp is None:
+            i, comp = 0, i_or_comp
+        else:
+            i = i_or_comp
+        self.inputs[i] = comp
+        return self
+
+    @property
+    def input_type_names(self) -> List[str]:
+        return [c.output_type_name for c in self.inputs]  # type: ignore
+
+    @property
+    def output_type_name(self) -> str:
+        return self.name
+
+
+class ScanSet(Computation):
+    """Reads a stored set page-by-page (ObjectReader)."""
+
+    arity = 0
+
+    def __init__(self, db: str, set_name: str, type_name: str):
+        super().__init__(name=f"Scan_{set_name}")
+        self.db = db
+        self.set_name = set_name
+        self.type_name = type_name
+
+    @property
+    def output_type_name(self) -> str:
+        return self.type_name
+
+
+class WriteSet(Computation):
+    """Writes its input set to storage (Writer)."""
+
+    def __init__(self, db: str, set_name: str):
+        super().__init__(name=f"Write_{set_name}")
+        self.db = db
+        self.set_name = set_name
+
+
+class SelectionComp(Computation):
+    """Relational selection + projection over one input set."""
+
+    def __init__(self, name: Optional[str] = None):
+        super().__init__(name)
+
+    @abc.abstractmethod
+    def get_selection(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+    @abc.abstractmethod
+    def get_projection(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+
+class MultiSelectionComp(Computation):
+    """Selection with a set-valued projection: each input row maps to zero or
+    more output rows. The projection lambda must return, per input column, a
+    pair (values, repeats) — values flattened, repeats giving the fan-out."""
+
+    @abc.abstractmethod
+    def get_selection(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+    @abc.abstractmethod
+    def get_projection(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+
+class JoinComp(Computation):
+    """N-ary join with arbitrary predicate. The optimizer extracts equality
+    conjuncts as hash-join keys and leaves the rest as a residual filter —
+    exactly the paper's treatment (§7)."""
+
+    def __init__(self, arity: int = 2, name: Optional[str] = None):
+        self.arity = arity
+        super().__init__(name)
+
+    @abc.abstractmethod
+    def get_selection(self, *args: LambdaArg) -> LambdaTerm:
+        ...
+
+    @abc.abstractmethod
+    def get_projection(self, *args: LambdaArg) -> LambdaTerm:
+        ...
+
+
+class AggregateComp(Computation):
+    """Aggregation: per-record (key, value) extraction + an associative
+    combiner, executed with PC's two-stage distributed plan (pre-aggregate →
+    shuffle-by-key-hash → final aggregate)."""
+
+    def __init__(self, name: Optional[str] = None,
+                 combiner: str = "sum"):
+        super().__init__(name)
+        self.combiner = combiner  # sum | max | min (associative, vectorized)
+
+    @abc.abstractmethod
+    def get_key_projection(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+    @abc.abstractmethod
+    def get_value_projection(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+
+class TopKComp(Computation):
+    """Top-k by a score lambda (the paper's TopJaccard pattern): extract a
+    (score, payload) pair per record; keep the global k best. Implemented as
+    pre-top-k per page, merge across pages/workers — an aggregation sink."""
+
+    def __init__(self, k: int, name: Optional[str] = None):
+        super().__init__(name)
+        self.k = k
+
+    @abc.abstractmethod
+    def get_score(self, arg: LambdaArg) -> LambdaTerm:
+        ...
+
+    @abc.abstractmethod
+    def get_payload(self, arg: LambdaArg) -> LambdaTerm:
+        ...

@@ -1,0 +1,224 @@
+"""PlinyCompute's lambda calculus (paper §4).
+
+A programmer does not write computations over data — they write *lambda term
+construction functions* that build an expression tree describing the
+computation. The built-in abstraction families are reproduced faithfully:
+
+* :func:`make_lambda_from_member`  — attribute access on a record column
+* :func:`make_lambda_from_method`  — registered vectorized "method" call
+* :func:`make_lambda`              — opaque native function (the engine
+  cannot optimize through it, exactly as in the paper)
+* :func:`make_lambda_from_self`    — identity
+
+Higher-order composition is via operator overloading on :class:`LambdaTerm`
+(``==``, ``>``, ``&``, ``|``, ``~``, ``+``, ``-``, ``*`` …), each returning a
+new term. Terms carry enough metadata (the TCAP key-value map) for the
+rule-based optimizer to reason about them.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "LambdaArg", "LambdaTerm", "make_lambda_from_member",
+    "make_lambda_from_method", "make_lambda", "make_lambda_from_self",
+    "constant", "register_method", "METHOD_REGISTRY",
+]
+
+_ids = itertools.count(1)
+
+# (type_name, method_name) -> vectorized callable(column)->column.
+# This is the template-metaprogramming analogue: each registered method IS the
+# compiled pipeline stage for that type (paper §5.3).
+METHOD_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_method(type_name: str, method_name: str):
+    def deco(fn):
+        METHOD_REGISTRY[(type_name, method_name)] = fn
+        return fn
+    return deco
+
+
+class LambdaArg:
+    """A placeholder for one input set of a Computation (``Handle<T> arg``)."""
+
+    def __init__(self, slot: int, type_name: str, name: Optional[str] = None):
+        self.slot = slot
+        self.type_name = type_name
+        self.name = name or f"in{slot}"
+
+    def term(self) -> "LambdaTerm":
+        return LambdaTerm("self", [], {"slot": self.slot,
+                                       "type": self.type_name}, args=(self,))
+
+    def __getattr__(self, attr: str) -> "LambdaTerm":
+        if attr.startswith("_"):
+            raise AttributeError(attr)
+        return make_lambda_from_member(self, attr)
+
+
+class LambdaTerm:
+    """A node in the lambda-calculus expression tree."""
+
+    def __init__(self, kind: str, inputs: List["LambdaTerm"], info: Dict[str, Any],
+                 args: Tuple[LambdaArg, ...] = ()):
+        self.kind = kind  # attAccess|methodCall|native|self|cmp|bool|arith|const
+        self.inputs = inputs
+        self.info = dict(info)
+        self.uid = next(_ids)
+        argset: List[LambdaArg] = list(args)
+        for t in inputs:
+            for a in t.args:
+                if a not in argset:
+                    argset.append(a)
+        self.args: Tuple[LambdaArg, ...] = tuple(argset)
+
+    # ------------------------------------------------------- composition
+    def _binary(self, other, kind: str, op: str) -> "LambdaTerm":
+        if not isinstance(other, LambdaTerm):
+            other = constant(other)
+        return LambdaTerm(kind, [self, other], {"op": op})
+
+    # comparisons
+    def __eq__(self, other):  # type: ignore[override]
+        return self._binary(other, "cmp", "==")
+
+    def __ne__(self, other):  # type: ignore[override]
+        return self._binary(other, "cmp", "!=")
+
+    def __gt__(self, other):
+        return self._binary(other, "cmp", ">")
+
+    def __ge__(self, other):
+        return self._binary(other, "cmp", ">=")
+
+    def __lt__(self, other):
+        return self._binary(other, "cmp", "<")
+
+    def __le__(self, other):
+        return self._binary(other, "cmp", "<=")
+
+    # booleans
+    def __and__(self, other):
+        return self._binary(other, "bool", "&&")
+
+    def __or__(self, other):
+        return self._binary(other, "bool", "||")
+
+    def __invert__(self):
+        return LambdaTerm("bool", [self], {"op": "!"})
+
+    # arithmetic
+    def __add__(self, other):
+        return self._binary(other, "arith", "+")
+
+    def __sub__(self, other):
+        return self._binary(other, "arith", "-")
+
+    def __mul__(self, other):
+        return self._binary(other, "arith", "*")
+
+    def __truediv__(self, other):
+        return self._binary(other, "arith", "/")
+
+    __hash__ = object.__hash__  # __eq__ is overloaded; identity hashing
+
+    # --------------------------------------------------------- metadata
+    @property
+    def depends_on_slots(self) -> Tuple[int, ...]:
+        return tuple(sorted({a.slot for a in self.args}))
+
+    def structural_key(self) -> Tuple:
+        """Key for CSE: two terms with equal keys compute the same value
+        (methodCalls are purely functional by the paper's contract)."""
+        return (self.kind, tuple(sorted(self.info.items())
+                                 if self.kind != "native" else [("uid", self.uid)]),
+                tuple(i.structural_key() for i in self.inputs))
+
+    def __repr__(self):
+        return f"λ[{self.kind}:{self.info.get('op') or self.info.get('attName') or self.info.get('methodName') or ''}]"
+
+    # -------------------------------------------------------- evaluation
+    def evaluate(self, columns: Dict[int, Any]):
+        """Vectorized evaluation against one column per input slot.
+
+        The executor normally evaluates APPLY-by-APPLY; this direct evaluator
+        is the semantics oracle used by the optimizer-equivalence tests.
+        """
+        return _eval(self, columns)
+
+
+def _eval(t: LambdaTerm, columns: Dict[int, Any]):
+    if t.kind == "self":
+        return columns[t.info["slot"]]
+    if t.kind == "const":
+        return t.info["value"]
+    if t.kind == "attAccess":
+        rec = _eval(t.inputs[0], columns)
+        return rec[t.info["attName"]]
+    if t.kind == "methodCall":
+        rec = _eval(t.inputs[0], columns)
+        fn = METHOD_REGISTRY[(t.info["onType"], t.info["methodName"])]
+        return fn(rec)
+    if t.kind == "native":
+        vals = [_eval(i, columns) for i in t.inputs]
+        return t.info["fn"](*vals)
+    if t.kind in ("cmp", "bool", "arith"):
+        op = t.info["op"]
+        if op == "!":
+            return np.logical_not(_eval(t.inputs[0], columns))
+        a, b = (_eval(i, columns) for i in t.inputs)
+        return _APPLY_BINOP[op](a, b)
+    raise ValueError(f"unknown lambda kind {t.kind}")
+
+
+_APPLY_BINOP = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    "&&": np.logical_and,
+    "||": np.logical_or,
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+}
+
+
+# ------------------------------------------------------------- factories
+def make_lambda_from_member(arg: LambdaArg, attr: str) -> LambdaTerm:
+    return LambdaTerm("attAccess", [arg.term()],
+                      {"attName": attr, "onType": arg.type_name})
+
+
+def make_lambda_from_method(arg: LambdaArg, method: str) -> LambdaTerm:
+    if (arg.type_name, method) not in METHOD_REGISTRY:
+        raise KeyError(f"method {method!r} not registered for type "
+                       f"{arg.type_name!r} (register_method first — this is "
+                       "the catalog's .so registration)")
+    return LambdaTerm("methodCall", [arg.term()],
+                      {"methodName": method, "onType": arg.type_name})
+
+
+def make_lambda(args: Sequence[LambdaArg] | LambdaArg, fn: Callable,
+                name: str = "native") -> LambdaTerm:
+    """Opaque native lambda — the engine cannot see inside (paper §4)."""
+    if isinstance(args, LambdaArg):
+        args = [args]
+    return LambdaTerm("native", [a.term() for a in args],
+                      {"fn": fn, "name": name})
+
+
+def make_lambda_from_self(arg: LambdaArg) -> LambdaTerm:
+    return arg.term()
+
+
+def constant(value) -> LambdaTerm:
+    return LambdaTerm("const", [], {"value": value})

@@ -1,0 +1,80 @@
+"""Physical planning (paper §5, Appendix C/D).
+
+Two decisions mirror the paper exactly:
+
+1. **Join algorithm** — broadcast join when the build side is estimated
+   under a threshold (the paper uses 2 GB), hash-partition join otherwise.
+   The estimate traces the build pipeline to its SCAN and uses catalog
+   statistics (record count × record size); like the paper we have no value
+   statistics, so filters apply a fixed selectivity discount.
+2. **Pipeline decomposition** — the TCAP DAG is split into pipelines at
+   *pipe sinks* (JOIN build sides, AGG, TOPK, OUTPUT); each pipeline runs
+   stage-fused over vector lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.tcap import TCAPOp, TCAPProgram
+from repro.objectmodel.store import PagedStore
+
+__all__ = ["PhysicalPlan", "plan_physical", "estimate_bytes"]
+
+FILTER_SELECTIVITY = 0.5  # no value statistics (paper §7 future work)
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    join_algo: Dict[int, str]
+    pipelines: List[List[TCAPOp]]
+    estimates: Dict[str, float]  # list name -> estimated bytes
+
+
+def estimate_bytes(prog: TCAPProgram, list_name: str, store: PagedStore,
+                   memo: Optional[Dict[str, float]] = None) -> float:
+    memo = memo if memo is not None else {}
+    if list_name in memo:
+        return memo[list_name]
+    op = prog.producer_of(list_name)
+    if op is None:
+        return 0.0
+    if op.op == "SCAN":
+        try:
+            s = store.get_set(op.info["set"])
+            est = float(s.num_records * s.dtype.itemsize)
+        except KeyError:
+            est = float(1 << 20)
+    elif op.op == "FILTER":
+        est = estimate_bytes(prog, op.in_list, store, memo) * FILTER_SELECTIVITY
+    elif op.op == "JOIN":
+        est = (estimate_bytes(prog, op.in_list, store, memo)
+               + estimate_bytes(prog, op.in_list2, store, memo))
+    elif op.op == "AGG":
+        est = estimate_bytes(prog, op.in_list, store, memo) * 0.1
+    else:
+        est = estimate_bytes(prog, op.in_list, store, memo)
+    memo[list_name] = est
+    return est
+
+
+def plan_physical(prog: TCAPProgram, store: PagedStore,
+                  broadcast_threshold: int = 2 << 30) -> PhysicalPlan:
+    memo: Dict[str, float] = {}
+    algo: Dict[int, str] = {}
+    for op in prog.ops:
+        if op.op == "JOIN":
+            build = estimate_bytes(prog, op.in_list2, store, memo)
+            algo[id(op)] = ("broadcast" if build < broadcast_threshold
+                            else "hash_partition")
+
+    pipelines: List[List[TCAPOp]] = []
+    cur: List[TCAPOp] = []
+    for op in prog.ops:
+        cur.append(op)
+        if op.op in ("JOIN", "AGG", "TOPK", "OUTPUT", "FLATTEN"):
+            pipelines.append(cur)
+            cur = []
+    if cur:
+        pipelines.append(cur)
+    return PhysicalPlan(algo, pipelines, memo)

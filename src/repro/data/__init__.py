@@ -1,0 +1,7 @@
+from repro.data.pipeline import TokenLoader, TokenPageWriter, make_lm_batches
+from repro.data.synthetic import denormalized_tpch, lda_triples, lm_tokens, points
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["TokenLoader", "TokenPageWriter", "make_lm_batches",
+           "denormalized_tpch", "lda_triples", "lm_tokens", "points",
+           "ByteTokenizer"]

@@ -1,0 +1,6 @@
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               StragglerPlan, Supervisor)
+from repro.distributed.elastic import rebalance_shards, reshard_state
+
+__all__ = ["HeartbeatMonitor", "StragglerPlan", "Supervisor",
+           "rebalance_shards", "reshard_state"]

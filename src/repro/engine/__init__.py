@@ -1,0 +1,24 @@
+"""Execution engine: training/serving step builders, the two-stage
+distributed aggregation plan, distributed joins, gradient compression,
+and pipeline parallelism (paper §5, Appendix C/D adapted per DESIGN.md)."""
+from repro.engine.train_step import (TrainConfig, make_eval_step,
+                                     make_loss_fn, make_train_step)
+from repro.engine.serve_step import ServingEngine, make_serve_step, sample_token
+from repro.engine.aggregation import (broadcast_join, grad_reduce_two_stage,
+                                      hash_partition_join,
+                                      segment_preaggregate,
+                                      two_stage_aggregate)
+from repro.engine.compression import (CompressionConfig, compress_grads,
+                                      init_error_state)
+from repro.engine.pipeline_parallel import pipeline_forward, pipeline_loss
+from repro.engine.specs import (abstract_decode_state, input_shardings,
+                                input_specs)
+
+__all__ = [
+    "TrainConfig", "make_eval_step", "make_loss_fn", "make_train_step",
+    "ServingEngine", "make_serve_step", "sample_token", "broadcast_join",
+    "grad_reduce_two_stage", "hash_partition_join", "segment_preaggregate",
+    "two_stage_aggregate", "CompressionConfig", "compress_grads",
+    "init_error_state", "pipeline_forward", "pipeline_loss",
+    "abstract_decode_state", "input_shardings", "input_specs",
+]

@@ -1,0 +1,71 @@
+"""Gradient compression with error feedback, for slow cross-pod links.
+
+Two schemes:
+
+* **int8 quantization** — per-tensor scale, residual carried to the next
+  step (error feedback keeps the update unbiased in expectation);
+* **top-k sparsification** — keep the k largest-magnitude entries per
+  tensor, accumulate the rest in the residual.
+
+Intended placement (train_step): compress -> cross-pod reduce -> decompress.
+On the dry-run mesh this shows up as a 4x reduction of cross-pod
+all-reduce bytes in §Roofline's collective term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "init_error_state", "compress_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"  # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g: jax.Array, err: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), gf - deq
+
+
+def _topk_roundtrip(g: jax.Array, err: jax.Array, frac: float
+                    ) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+    kept = gf * mask
+    return kept.astype(g.dtype), gf - kept
+
+
+def compress_grads(grads, err_state, cfg: CompressionConfig
+                   ) -> Tuple[Any, Any]:
+    """Returns (decompressed grads as seen post-reduce, new error state)."""
+    if cfg.scheme == "none":
+        return grads, err_state
+    if cfg.scheme == "int8":
+        out = jax.tree.map(_int8_roundtrip, grads, err_state)
+    elif cfg.scheme == "topk":
+        out = jax.tree.map(lambda g, e: _topk_roundtrip(g, e, cfg.topk_frac),
+                           grads, err_state)
+    else:
+        raise ValueError(cfg.scheme)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2 \
+        and isinstance(t[0], jax.Array)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_e = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return new_g, new_e

@@ -1,0 +1,138 @@
+"""Serving step builder: one-token decode against the KV cache (the shape
+the ``decode_*`` dry-run cells lower), plus sampling helpers and a
+continuous-batching host loop driven by the paged-KV object model."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.context import Ctx
+from repro.models.model_zoo import Model
+from repro.objectmodel.kvcache import KVCacheConfig, KVPageManager
+
+__all__ = ["make_serve_step", "sample_token", "ServingEngine"]
+
+
+def sample_token(logits: jax.Array, rng: jax.Array,
+                 temperature: float = 0.0) -> jax.Array:
+    """logits: (B, 1, V) -> (B, 1) int32."""
+    lg = logits[:, -1]
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(rng, lg / temperature)[:, None] \
+        .astype(jnp.int32)
+
+
+def make_serve_step(model: Model, ctx: Ctx, temperature: float = 0.0):
+    """serve_step(params, token, state, rng) -> (next_token, logits, state).
+
+    This is the function the decode dry-run cells lower: one new token with
+    a KV cache of the assigned sequence length. The state is donated."""
+
+    def serve_step(params, token, state, rng):
+        logits, state = model.decode_step(params, token, state, ctx)
+        nxt = sample_token(logits, rng, temperature)
+        return nxt, logits, state
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class _Seq:
+    sid: int
+    prompt: List[int]
+    out: List[int]
+    done: bool = False
+
+
+class ServingEngine:
+    """Host-side continuous batching on top of the paged-KV object model.
+
+    Slots in the device batch are the buffer-pool frames; finished
+    sequences release their KV pages back to the free list (recycling
+    policy) and the slot is refilled from the queue — PC's page lifecycle
+    applied to serving."""
+
+    def __init__(self, model: Model, params, batch_size: int, max_seq: int,
+                 ctx: Optional[Ctx] = None, eos_id: int = 0,
+                 page_size: int = 64):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.ctx = ctx or Ctx()
+        self.eos = eos_id
+        cfg = model.cfg
+        self.kv_cfg = KVCacheConfig(
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, max_seq_len=max_seq,
+            page_size=page_size,
+            num_pages=batch_size * (-(-max_seq // page_size)) * 2,
+            num_shards=1)
+        self.pages = KVPageManager(self.kv_cfg)
+        pdtype = str(jax.tree.leaves(params)[0].dtype)
+        self.state = model.init_decode_state(batch_size, max_seq, pdtype)
+        self.slots: List[Optional[_Seq]] = [None] * batch_size
+        self.queue: List[_Seq] = []
+        self.finished: List[_Seq] = []
+        self._sid = 0
+        self._step = jax.jit(make_serve_step(model, self.ctx),
+                             donate_argnums=(2,))
+        self._tokens = np.zeros((batch_size, 1), np.int32)
+        self._prompts_pending: Dict[int, List[int]] = {}
+
+    def submit(self, prompt: List[int]) -> int:
+        self._sid += 1
+        self.queue.append(_Seq(self._sid, list(prompt), []))
+        return self._sid
+
+    def _admit(self) -> None:
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                seq = self.queue.pop(0)
+                self.slots[i] = seq
+                self.pages.allocate(seq.sid, len(seq.prompt) + 8)
+                self._prompts_pending[i] = list(seq.prompt)
+                # reset this slot's cache length
+                self.state = self.state._replace(
+                    length=self.state.length.at[i].set(0))
+
+    def step(self, rng) -> int:
+        """One engine iteration; returns number of active slots."""
+        self._admit()
+        active = 0
+        for i, seq in enumerate(self.slots):
+            if seq is None:
+                continue
+            active += 1
+            pend = self._prompts_pending.get(i)
+            if pend:
+                self._tokens[i, 0] = pend.pop(0)  # prompt feeding
+            # else: token was set from the previous sample
+        if active == 0:
+            return 0
+        nxt, logits, self.state = self._step(
+            self.params, jnp.asarray(self._tokens), self.state, rng)
+        nxt = np.asarray(nxt)
+        for i, seq in enumerate(self.slots):
+            if seq is None:
+                continue
+            pend = self._prompts_pending.get(i)
+            if pend:  # still consuming the prompt
+                continue
+            tok = int(nxt[i, 0])
+            seq.out.append(tok)
+            self._tokens[i, 0] = tok
+            length = int(np.asarray(self.state.length)[i])
+            if tok == self.eos or length >= self.max_seq - 1 \
+                    or len(seq.out) >= self.max_seq:
+                seq.done = True
+                self.pages.release(seq.sid)  # recycle KV pages
+                self.finished.append(seq)
+                self.slots[i] = None
+                self._prompts_pending.pop(i, None)
+        return active

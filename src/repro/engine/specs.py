@@ -1,0 +1,64 @@
+"""Input specs for every (arch x shape) cell: ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, no device allocation) plus their
+PartitionSpecs — what the multi-pod dry-run lowers against."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.core.planner import ShardingPlan
+from repro.models.model_zoo import Model, _batch_axis
+
+__all__ = ["input_specs", "input_shardings", "abstract_decode_state"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(model: Model, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch stand-ins for train/prefill; token for decode."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.param_dtype
+    if shape.kind == "decode":
+        specs: Dict[str, Any] = {"token": _sds((B, 1), jnp.int32)}
+        return specs
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "audio":
+        # stub conv frontend: precomputed frame embeddings
+        specs["frames"] = _sds((B, cfg.encoder_len, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        # stub ViT: precomputed patch embeddings
+        specs["patches"] = _sds((B, cfg.n_patches, cfg.d_model), dt)
+    return specs
+
+
+def input_shardings(model: Model, shape: ShapeConfig, plan: ShardingPlan
+                    ) -> Dict[str, P]:
+    b = _batch_axis(plan)
+    cfg = model.cfg
+    if shape.kind == "decode":
+        return {"token": P(b, None)}
+    out = {"tokens": P(b, None)}
+    if shape.kind == "train":
+        out["labels"] = P(b, None)
+    if cfg.family == "audio":
+        out["frames"] = P(b, None, None)
+    if cfg.family == "vlm":
+        out["patches"] = P(b, None, None)
+    return out
+
+
+def abstract_decode_state(model: Model, shape: ShapeConfig,
+                          kv_dtype: Optional[str] = None):
+    """Decode-state stand-ins via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len,
+                                        kv_dtype=kv_dtype))

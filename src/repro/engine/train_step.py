@@ -1,0 +1,126 @@
+"""Training step builder — PC's two-stage distributed aggregation applied
+to gradients (DESIGN.md §2).
+
+Stage 1 (*pre-aggregation*, the paper's per-thread combiner pages): the
+global batch is split into microbatches; a `lax.scan` accumulates gradients
+into a single donated buffer — one "combiner page" per chip.
+
+Stage 2 (*shuffle + final aggregate*): under GSPMD the data-parallel
+gradient reduction lowers to reduce-scatter/all-reduce keyed by parameter
+shard — the shuffle-by-hash-partition. With FSDP, each chip's optimizer
+updates only the shard it owns (the paper's one-aggregation-thread-per-
+partition), then updated params are all-gathered by the next forward.
+
+Optional gradient compression (error feedback) sits between the stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.engine.compression import (CompressionConfig, compress_grads,
+                                      init_error_state)
+from repro.models.context import Ctx
+from repro.models.model_zoo import Model
+from repro.optim import AdamWConfig, OptState, adamw_update
+
+__all__ = ["TrainConfig", "make_loss_fn", "make_train_step"]
+
+AUX_LOSS_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    opt: AdamWConfig = AdamWConfig()
+    compression: CompressionConfig = CompressionConfig()
+    z_loss: float = 1e-4
+
+
+def make_loss_fn(model: Model, ctx: Ctx, tcfg: TrainConfig):
+    cfg = model.cfg
+
+    def loss_fn(params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, aux = model.forward(params, batch, ctx)  # (B,S,V) f32
+        labels = batch["labels"]
+        # shift: predict token t+1 from prefix <= t
+        lg = logits[:, :-1]
+        tg = labels[:, 1:]
+        mask = (tg >= 0).astype(jnp.float32)
+        tg = jnp.maximum(tg, 0)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+        nll = (logz - ll) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = nll.sum() / denom
+        zl = tcfg.z_loss * ((logz * mask) ** 2).sum() / denom
+        total = ce + zl + AUX_LOSS_COEF * aux
+        metrics = {"loss": ce, "aux_loss": aux, "z_loss": zl,
+                   "tokens": denom}
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, ctx: Ctx,
+                    tcfg: TrainConfig = TrainConfig(),
+                    lr_fn: Optional[Callable] = None):
+    """Returns train_step(params, opt_state, err_state, batch, step)."""
+    loss_fn = make_loss_fn(model, ctx, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if lr_fn is None:
+        lr_fn = lambda step: jnp.full((), 3e-4, jnp.float32)
+
+    def train_step(params, opt_state: OptState, err_state, batch: Dict):
+        k = tcfg.microbatches
+        if k <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # -------- stage 1: microbatch pre-aggregation (combiner pages)
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(k, b // k, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_step, (zero_g, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss_sum / k
+            metrics = {"loss": loss}
+
+        # -------- optional compression with error feedback (cross-pod)
+        grads, err_state = compress_grads(grads, err_state,
+                                          tcfg.compression)
+        # -------- stage 2: sharded optimizer update (final aggregation)
+        lr = lr_fn(opt_state.step)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, lr, tcfg.opt)
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return params, opt_state, err_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, ctx: Ctx, tcfg: TrainConfig = TrainConfig()):
+    loss_fn = make_loss_fn(model, ctx, tcfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each with a jitted
+wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+* flash_attention — online-softmax attention with VMEM tiling,
+* paged_attention — decode over the paged-KV object model,
+* moe_gather      — the hash-partition-join build (dispatch buffers),
+* ssm_scan        — fused selective-SSM recurrence (states stay in VMEM).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

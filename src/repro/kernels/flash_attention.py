@@ -1,0 +1,129 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+The "in the small" hot loop of every attention arch: online-softmax over KV
+blocks with explicit HBM->VMEM BlockSpec tiling. Grid is
+(batch, q_heads, q_blocks, kv_blocks); the kv dimension is the innermost
+(sequential on TPU), with running max / denominator / accumulator held in
+VMEM scratch across kv steps — HBM traffic is exactly Q+K+V+O, the flash
+bound. GQA is expressed in the K/V index maps (q head -> kv head), so no
+repeated-KV materialization ever happens.
+
+Block sizes default to (128, 128): MXU-aligned (multiples of 128 on both
+matmul dims) and small enough that q/k/v/acc tiles fit VMEM:
+(128+2*128)*hd*2B + 128*hd*4B ≈ 0.33 MiB at hd=256.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            kv_len: int):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    def _block():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = ki < kv_len
+        if causal:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            valid = valid & (qi >= ki)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    if causal:
+        # skip fully-masked kv blocks (the causal compute saving)
+        pl.when(k_start <= q_start + block_q - 1)(_block)
+    else:
+        _block()
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, K, hd) with H % K == 0."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = hd ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # pad S/T to block multiples
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_k) * block_k
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+
+    grid = (B, H, Sp // block_q, Tp // block_k)
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_k=block_k, kv_len=T)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

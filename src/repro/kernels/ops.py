@@ -1,0 +1,40 @@
+"""Jitted public wrappers for the Pallas kernels (the API model code uses).
+
+On non-TPU backends every kernel runs in interpret mode (Python reference
+execution of the kernel body) — numerically identical, used for all CPU
+validation. On TPU the same BlockSpecs drive real VMEM tiling.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.moe_dispatch import moe_gather as _moe_gather
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.ssm_scan import ssm_scan as _ssm_scan
+
+__all__ = ["flash_attention", "paged_attention", "moe_gather", "ssm_scan"]
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k)
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, tables, lengths):
+    return _paged(q, k_pages, v_pages, tables, lengths)
+
+
+@partial(jax.jit, static_argnames=("block_slots",))
+def moe_gather(x, token_ids, keep, block_slots: int = 128):
+    return _moe_gather(x, token_ids, keep, block_slots=block_slots)
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def ssm_scan(dt, A, B, C, x, block_d: int = 256):
+    return _ssm_scan(dt, A, B, C, x, block_d=block_d)

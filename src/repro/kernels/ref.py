@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "paged_attention_ref", "moe_gather_ref",
+           "ssm_scan_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,T,K,hd). Materialized-softmax attention."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * (hd ** -0.5)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        tables: jax.Array, lengths: jax.Array) -> jax.Array:
+    """q: (B,H,hd); k/v_pages: (P,ps,K,hd); tables: (B,maxp) global page
+    ids (-1 = hole); lengths: (B,). Gathers pages then full softmax."""
+    B, H, hd = q.shape
+    P, ps, K, _ = k_pages.shape
+    maxp = tables.shape[1]
+    G = H // K
+    t = jnp.maximum(tables, 0)
+    k_seq = k_pages[t].reshape(B, maxp * ps, K, hd)  # (B, S, K, hd)
+    v_seq = v_pages[t].reshape(B, maxp * ps, K, hd)
+    pos = jnp.arange(maxp * ps)
+    page_ok = jnp.repeat(tables >= 0, ps, axis=1)
+    valid = (pos[None] < lengths[:, None]) & page_ok
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_seq.astype(jnp.float32)) \
+        * (hd ** -0.5)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, v_seq.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def moe_gather_ref(x: jax.Array, token_ids: jax.Array,
+                   keep: jax.Array) -> jax.Array:
+    """Gather token rows into the (E*C, d) dispatch buffer.
+
+    x: (T, d); token_ids: (E*C,) source row per slot; keep: (E*C,) bool."""
+    rows = x[jnp.maximum(token_ids, 0)]
+    return jnp.where(keep[:, None], rows, 0).astype(x.dtype)
+
+
+def ssm_scan_ref(dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """Selective-SSM scan oracle (sequential over time).
+
+    dt, x: (L, di); A: (di, N); B, C: (L, N). Returns y: (L, di)."""
+    L, di = x.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        a = jnp.exp(dt_t[:, None] * A)  # (di, N)
+        h = a * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y = (h * C_t[None, :]).sum(-1)
+        return h, y
+
+    h0 = jnp.zeros((di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (dt.astype(jnp.float32),
+                                    B.astype(jnp.float32),
+                                    C.astype(jnp.float32),
+                                    x.astype(jnp.float32)))
+    return ys

@@ -1,0 +1,71 @@
+"""Fused selective-SSM scan (Mamba hot loop) as a Pallas kernel.
+
+The pure-JAX chunked scan (repro.models.ssm) materializes (B, chunk, di, N)
+transition tensors in HBM; this kernel keeps the (bd, N) state AND the
+per-step transition entirely in VMEM, streaming dt/B/C/x through time —
+HBM traffic drops from O(L*di*N) to O(L*(di + N)), the kernel's whole
+point on TPU (the state expansion never leaves VMEM).
+
+Grid = (batch, di / bd): each program owns a channel block and walks the
+full sequence with a fori_loop. VMEM: (bd, N) state + (L_blk,*) streams.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan"]
+
+
+def _kernel(dt_ref, A_ref, B_ref, C_ref, x_ref, y_ref, h_scr, *, L: int):
+    h_scr[...] = jnp.zeros_like(h_scr)
+    A = A_ref[...].astype(jnp.float32)  # (bd, N)
+
+    def step(t, _):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (bd,)
+        B_t = B_ref[0, t, :].astype(jnp.float32)  # (N,)
+        C_t = C_ref[0, t, :].astype(jnp.float32)  # (N,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)  # (bd,)
+        a = jnp.exp(dt_t[:, None] * A)  # (bd, N)
+        h = a * h_scr[...] + (dt_t * x_t)[:, None] * B_t[None, :]
+        h_scr[...] = h
+        y_ref[0, t, :] = (h * C_t[None, :]).sum(-1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, L, step, 0)
+
+
+def ssm_scan(dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+             x: jax.Array, block_d: int = 256,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """dt, x: (Bt, L, di); A: (di, N); B, C: (Bt, L, N) -> y: (Bt, L, di).
+
+    Output is float32 (matches the reference scan's accumulation)."""
+    Bt, L, di = x.shape
+    N = A.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_d = min(block_d, di)
+    assert di % block_d == 0, (di, block_d)
+    kern = functools.partial(_kernel, L=L)
+    out = pl.pallas_call(
+        kern,
+        grid=(Bt, di // block_d),
+        in_specs=[
+            pl.BlockSpec((1, L, block_d), lambda b, i: (b, 0, i)),  # dt
+            pl.BlockSpec((block_d, N), lambda b, i: (i, 0)),  # A
+            pl.BlockSpec((1, L, N), lambda b, i: (b, 0, 0)),  # B
+            pl.BlockSpec((1, L, N), lambda b, i: (b, 0, 0)),  # C
+            pl.BlockSpec((1, L, block_d), lambda b, i: (b, 0, i)),  # x
+        ],
+        out_specs=pl.BlockSpec((1, L, block_d), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((Bt, L, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, A, B, C, x)
+    return out

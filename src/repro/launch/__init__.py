@@ -1,0 +1,4 @@
+"""Launchers: production mesh, multi-pod dry-run, training and serving
+drivers. NOTE: dryrun.py sets XLA_FLAGS before importing jax — import it
+only as an entry point (``python -m repro.launch.dryrun``), never from
+library code."""

@@ -1,0 +1,147 @@
+"""Training driver: data pages -> supervised train loop with atomic
+checkpointing, restart recovery, and heartbeat-based straggler checks.
+
+CPU-scale entry point (used by examples/train_lm.py and the integration
+tests); on a real pod the same loop runs under jit with the planner's
+shardings — see repro.launch.dryrun for the lowering.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm_125m --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_arch, reduced_config
+from repro.data import ByteTokenizer, TokenLoader, TokenPageWriter
+from repro.data.synthetic import lm_tokens
+from repro.distributed import HeartbeatMonitor, Supervisor
+from repro.engine import TrainConfig, make_train_step
+from repro.models import Ctx, build_model
+from repro.objectmodel import PagedStore
+from repro.optim import AdamWConfig, init_opt_state, warmup_cosine
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(arch: str, *, steps: int, batch: int, seq: int,
+               ckpt_dir: Optional[str] = None, reduced: bool = True,
+               save_every: int = 20, microbatches: int = 1,
+               lr: float = 3e-4, seed: int = 0, log_every: int = 10,
+               fail_at: Optional[int] = None,
+               dtype: str = "float32") -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init_params(rng, dtype)
+    ocfg = AdamWConfig(moment_dtype="float32")
+    opt = init_opt_state(params, ocfg)
+    tcfg = TrainConfig(microbatches=microbatches, opt=ocfg)
+    lr_fn = warmup_cosine(lr, max(1, steps // 20), steps)
+    step_fn_jit = jax.jit(make_train_step(model, Ctx(), tcfg, lr_fn),
+                          donate_argnums=(0, 1))
+
+    # --- data: synthetic tokens through the zero-copy page pipeline
+    store = PagedStore()
+    w = TokenPageWriter(store, "train", seq)
+    toks = lm_tokens(max(64, batch * 8), seq, cfg.vocab_size, seed)
+    for row in toks:
+        w.add_document(row.tolist())
+    loader = TokenLoader(w.set, batch, seed=seed)
+    batches = iter(_cycle(loader))
+
+    monitor = HeartbeatMonitor(n_workers=1)
+    losses = []
+    t_start = time.time()
+
+    fired = {"crash": False}
+
+    def one_step(state, step):
+        params, opt = state
+        if fail_at is not None and step == fail_at and not fired["crash"]:
+            fired["crash"] = True  # one-shot: node comes back after re-fork
+            raise RuntimeError("injected worker failure")  # tests
+        b = next(batches)
+        t0 = time.time()
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        extra = _extra_inputs(cfg, batch, dtype)
+        jb.update(extra)
+        params, opt, _, metrics = step_fn_jit(params, opt, None, jb)
+        monitor.beat(0, time.time() - t0)
+        losses.append(float(metrics["total_loss"]))
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        return params, opt
+
+    state = (params, opt)
+    report = None
+    if ckpt_dir:
+        sup = Supervisor(Checkpointer(ckpt_dir), save_every=save_every)
+        state, report = sup.run(
+            state, one_step, steps,
+            extra_fn=lambda: {"data": loader.state()},
+            restore_extra=lambda e: loader.restore(e.get("data", loader.state())))
+    else:
+        for s in range(steps):
+            state = one_step(state, s)
+    return {"losses": losses, "params": state[0], "opt": state[1],
+            "report": report, "seconds": time.time() - t_start,
+            "straggler_plan": monitor.check()}
+
+
+def _extra_inputs(cfg, batch, dtype):
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = jnp.zeros((batch, cfg.encoder_len, cfg.d_model),
+                                  jnp.dtype(dtype))
+    if cfg.family == "vlm":
+        out["patches"] = jnp.zeros((batch, cfg.n_patches, cfg.d_model),
+                                   jnp.dtype(dtype))
+    return out
+
+
+def _cycle(loader):
+    while True:
+        n = 0
+        for b in loader:
+            n += 1
+            yield b
+        if n == 0:
+            raise RuntimeError("empty loader")
+        loader.shard.cursor = 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    args = ap.parse_args(argv)
+    out = train_loop(args.arch, steps=args.steps, batch=args.batch,
+                     seq=args.seq, ckpt_dir=args.ckpt_dir,
+                     reduced=args.reduced, save_every=args.save_every,
+                     microbatches=args.microbatches, lr=args.lr)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"({out['seconds']:.1f}s, {len(out['losses'])} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Composable model definitions for the ten assigned architectures."""
+from repro.models.context import Ctx
+from repro.models.model_zoo import Model, build_model
+from repro.models.params import ParamDef, abstract, count, initialize, specs
+
+__all__ = ["Ctx", "Model", "build_model", "ParamDef", "abstract", "count",
+           "initialize", "specs"]

@@ -1,0 +1,186 @@
+"""GQA attention: training/prefill (full + chunked online-softmax paths),
+decode against a dense KV cache, and cross-attention for the enc-dec arch.
+
+The chunked path is the memory-sane jnp reference (online softmax over KV
+blocks — the algorithm the Pallas flash kernel implements with explicit
+VMEM tiling); `use_flash` switches the hot loop to the kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import rope
+from repro.models.params import ParamDef
+
+__all__ = ["attn_defs", "attn_project_qkv", "full_attention",
+           "chunked_attention", "decode_attention", "attention_block",
+           "cross_attention_block"]
+
+_NEG = -1e30
+CHUNKED_THRESHOLD = 8192  # use online-softmax KV chunking above this S
+
+
+def attn_defs(cfg: ArchConfig, stacked: Optional[int] = None,
+              cross: bool = False) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    out = {
+        "wq": ParamDef((*lead, d, H * hd), (*la, "embed", "q_dim")),
+        "wk": ParamDef((*lead, d, K * hd), (*la, "embed", "kv_heads")),
+        "wv": ParamDef((*lead, d, K * hd), (*la, "embed", "kv_heads")),
+        "wo": ParamDef((*lead, H * hd, d), (*la, "q_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((*lead, H * hd), (*la, "q_dim"), init="zeros")
+        out["bk"] = ParamDef((*lead, K * hd), (*la, "kv_heads"), init="zeros")
+        out["bv"] = ParamDef((*lead, K * hd), (*la, "kv_heads"), init="zeros")
+    return out
+
+
+def attn_project_qkv(cfg: ArchConfig, p: Dict, xq: jax.Array,
+                     xkv: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns q (B,S,H,hd), k/v (B,T,K,hd)."""
+    if xkv is None:
+        xkv = xq
+    hd = cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = xq.shape[:2]
+    T = xkv.shape[1]
+    return (q.reshape(B, S, H, hd), k.reshape(B, T, K, hd),
+            v.reshape(B, T, K, hd))
+
+
+def _gqa_shape(cfg: ArchConfig, q: jax.Array) -> jax.Array:
+    B, S, H, hd = q.shape
+    K = cfg.n_kv_heads
+    return q.reshape(B, S, K, H // K, hd)
+
+
+def full_attention(cfg: ArchConfig, q: jax.Array, k: jax.Array,
+                   v: jax.Array, causal: bool,
+                   q_offset: int = 0) -> jax.Array:
+    """Materialized-scores attention. q:(B,S,H,hd), k/v:(B,T,K,hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qg = _gqa_shape(cfg, q)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(S) + q_offset
+        ki = jnp.arange(T)
+        mask = qi[:, None] >= ki[None, :]
+        scores = jnp.where(mask[None, None, None], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def chunked_attention(cfg: ArchConfig, q: jax.Array, k: jax.Array,
+                      v: jax.Array, causal: bool, chunk: int = 1024
+                      ) -> jax.Array:
+    """Online-softmax over KV chunks (flash algorithm, jnp reference)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    K = cfg.n_kv_heads
+    G = H // K
+    if T % chunk:
+        pad = chunk - T % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T_pad = T + pad
+    else:
+        T_pad = T
+    n_chunks = T_pad // chunk
+    qg = _gqa_shape(cfg, q)
+    scale = hd ** -0.5
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        ki = ci * chunk + jnp.arange(chunk)
+        valid = ki < T
+        if causal:
+            qi = jnp.arange(S)
+            valid = valid[None, :] & (qi[:, None] >= ki[None, :])
+            s = jnp.where(valid[None, None, None], s, _NEG)
+        else:
+            s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(cfg: ArchConfig, q: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, length: jax.Array) -> jax.Array:
+    """One-token attention vs a dense cache.
+
+    q: (B,1,H,hd); k/v_cache: (B,Smax,K,hd); length: (B,) valid prefix."""
+    B, _, H, hd = q.shape
+    Smax = k_cache.shape[1]
+    qg = _gqa_shape(cfg, q)[:, 0]  # (B,K,G,hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(Smax)[None, :] < length[:, None]
+    s = jnp.where(valid[:, None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def attention_block(cfg: ArchConfig, p: Dict, x: jax.Array,
+                    positions: jax.Array, causal: bool = True,
+                    use_flash: bool = False) -> jax.Array:
+    """Self-attention over a full sequence (train/prefill)."""
+    q, k, v = attn_project_qkv(cfg, p, x)
+    if cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal)
+    elif S >= CHUNKED_THRESHOLD:
+        out = chunked_attention(cfg, q, k, v, causal)
+    else:
+        out = full_attention(cfg, q, k, v, causal)
+    B = x.shape[0]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_attention_block(cfg: ArchConfig, p: Dict, x: jax.Array,
+                          enc: jax.Array) -> jax.Array:
+    """Decoder cross-attention onto encoder output (no positions/causality)."""
+    q, k, v = attn_project_qkv(cfg, p, x, enc)
+    out = full_attention(cfg, q, k, v, causal=False)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"]

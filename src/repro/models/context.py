@@ -1,0 +1,33 @@
+"""Model execution context: carries the sharding plan + engine knobs into
+model functions, so layer code can place activation sharding constraints
+without depending on the mesh directly."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core.planner import ShardingPlan
+
+__all__ = ["Ctx"]
+
+
+@dataclasses.dataclass
+class Ctx:
+    plan: Optional[ShardingPlan] = None
+    use_flash: bool = False  # Pallas kernel paths (TPU / interpret)
+    quantize_dispatch: bool = False  # int8 MoE all-to-all (§Perf)
+    ep_shard_map: bool = False  # explicit shard_map expert parallelism
+    mesh: Optional[object] = None  # required for shard_map paths
+    deterministic: bool = True
+
+    def constrain(self, x: jax.Array, *axes) -> jax.Array:
+        """Annotate activation sharding (no-op without a multi-device plan)."""
+        if self.plan is None:
+            return x
+        sizes = [v for v in self.plan.mesh_axes.values()]
+        if all(s == 1 for s in sizes):
+            return x
+        spec = self.plan.act_spec(*axes)
+        return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,135 @@
+"""Common layers: norms, rotary embeddings, dense FFN variants, embeddings.
+
+All matmuls run in the param dtype (bf16 on TPU) with float32 softmax/norm
+statistics; logits and losses are float32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.params import ParamDef
+
+__all__ = ["rmsnorm", "layernorm", "norm_def", "apply_norm", "rope",
+           "ffn_defs", "ffn_apply", "embed_defs", "embed_lookup", "logits"]
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def norm_def(cfg: ArchConfig, stacked: Optional[int] = None) -> Dict:
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    d = {"scale": ParamDef((*lead, cfg.d_model), (*la, None), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((*lead, cfg.d_model), (*la, None), init="zeros")
+    return d
+
+
+def apply_norm(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions: (B, S) -> angles (B, S, 1, half), broadcast over heads
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- ffn
+def ffn_defs(cfg: ArchConfig, stacked: Optional[int] = None) -> Dict:
+    """Dense FFN parameter defs (gated or plain, per cfg.activation)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    gated = cfg.activation in ("swiglu", "geglu")
+    out = {"w_down": ParamDef((*lead, ff, d), (*la, "ff", "embed"))}
+    if gated:
+        out["w_gate"] = ParamDef((*lead, d, ff), (*la, "embed", "ff"))
+        out["w_up"] = ParamDef((*lead, d, ff), (*la, "embed", "ff"))
+    else:
+        out["w_up"] = ParamDef((*lead, d, ff), (*la, "embed", "ff"))
+    return out
+
+
+def _act(cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation in ("swiglu",):
+        return jax.nn.silu(x)
+    if cfg.activation in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    if cfg.activation == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(cfg.activation)
+
+
+def ffn_apply(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    gated = cfg.activation in ("swiglu", "geglu")
+    if gated:
+        h = _act(cfg, x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = _act(cfg, x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# -------------------------------------------------------------- embedding
+def embed_defs(cfg: ArchConfig) -> Dict:
+    d = {"tokens": ParamDef((cfg.padded_vocab, cfg.d_model),
+                            ("vocab", "embed"), init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        d["head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                             ("embed", "vocab"))
+    if cfg.pos_embedding == "learned":
+        # sized to the largest assigned full-sequence shape (prefill_32k)
+        d["positions"] = ParamDef((32_768, cfg.d_model), (None, "embed"),
+                                  init="small")
+    if cfg.encoder_len:
+        d["enc_positions"] = ParamDef((cfg.encoder_len, cfg.d_model),
+                                      (None, "embed"), init="small")
+    if cfg.n_patches:
+        d["patch_pos"] = ParamDef((cfg.n_patches, cfg.d_model),
+                                  (None, "embed"), init="small")
+    return d
+
+
+def embed_lookup(p: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+def logits(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    """Final projection to (padded) vocab, float32, pad columns masked."""
+    w = p["tokens"].T if cfg.tie_embeddings else p["head"]
+    out = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab_size,), jnp.float32),
+                                jnp.full((pad,), -1e30, jnp.float32)])
+        out = out + mask
+    return out

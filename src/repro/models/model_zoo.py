@@ -1,0 +1,125 @@
+"""Model facade: one object per architecture exposing everything the
+engine, dry-run, and tests need — abstract params (no allocation), real
+init, sharding specs, forward, and decode."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, get_arch
+from repro.core.planner import ShardingPlan
+from repro.models import params as pp
+from repro.models import transformer as tf
+from repro.models.context import Ctx
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    defs: Dict[str, Any]
+
+    # ------------------------------------------------------------ params
+    def abstract_params(self, dtype: Optional[str] = None):
+        return pp.abstract(self.defs, dtype or self.cfg.param_dtype)
+
+    def init_params(self, rng, dtype: Optional[str] = None):
+        return pp.initialize(self.defs, rng, dtype or self.cfg.param_dtype)
+
+    def param_specs(self, plan: ShardingPlan):
+        return pp.specs(self.defs, plan)
+
+    def param_count(self) -> int:
+        return pp.count(self.defs)
+
+    # ----------------------------------------------------------- compute
+    def forward(self, params, batch: Dict, ctx: Optional[Ctx] = None,
+                last_only: bool = False):
+        return tf.forward(self.cfg, params, batch, ctx or Ctx(), last_only)
+
+    def decode_step(self, params, token, state, ctx: Optional[Ctx] = None):
+        return tf.decode_step(self.cfg, params, token, state, ctx or Ctx())
+
+    def init_decode_state(self, batch: int, max_seq: int,
+                          dtype: Optional[str] = None,
+                          kv_dtype: Optional[str] = None):
+        return tf.init_decode_state(self.cfg, batch, max_seq,
+                                    dtype or self.cfg.param_dtype,
+                                    kv_dtype=kv_dtype)
+
+    def encode(self, params, frames, ctx: Optional[Ctx] = None):
+        assert self.cfg.family == "audio"
+        return tf.encode_whisper(self.cfg, params, frames, ctx or Ctx())
+
+    # decode-state sharding: KV caches shard over batch + kv strategy
+    def decode_state_specs(self, plan: ShardingPlan,
+                           kv_dtype: Optional[str] = None):
+        from jax.sharding import PartitionSpec as P
+        st = self.init_decode_state(1, 1, kv_dtype=kv_dtype)  # structure only
+
+        def spec_for(path: str, leaf):
+            if "k_cache" in path or "v_cache" in path:
+                return _kv_spec(plan, heads=(plan.kv_strategy == "heads"))
+            if "k_scale" in path or "v_scale" in path:
+                # (L, B, S, K): co-sharded with the cache minus head dim
+                full = _kv_spec(plan, heads=(plan.kv_strategy == "heads"))
+                return P(*tuple(full)[:4])
+            if "enc_out" in path:
+                return plan.act_spec("batch", None, None)
+            if "length" in path:
+                return P()
+            # recurrent states: batch-sharded, inner dim TP-sharded
+            return _state_spec(plan, leaf)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(st)
+        specs = []
+        for path, leaf in flat:
+            key = "/".join(str(getattr(p, "name", getattr(p, "key", p)))
+                           for p in path)
+            specs.append(spec_for(key, leaf))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _batch_axis(plan: ShardingPlan):
+    if not plan.shard_batch:
+        return None
+    dp = (*plan.dp_axes, *plan.batch_extra_axes)
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def _kv_spec(plan: ShardingPlan, heads: bool):
+    from jax.sharding import PartitionSpec as P
+    b = _batch_axis(plan)
+    # (L, B, S, K, hd)
+    if heads and plan.tp_axis:
+        return P(None, b, None, plan.tp_axis, None)
+    if plan.tp_axis:  # sequence-sharded KV (paged/flash-decode layout)
+        # batch replicated (long_500k): spread the sequence over ALL axes
+        seq = (plan.tp_axis if plan.shard_batch
+               else (*plan.dp_axes, plan.tp_axis))
+        return P(None, b, seq, None, None)
+    return P(None, b, None, None, None)
+
+
+def _state_spec(plan: ShardingPlan, leaf):
+    from jax.sharding import PartitionSpec as P
+    b = _batch_axis(plan)
+    nd = getattr(leaf, "ndim", 0)
+    if nd >= 3:
+        # (L, B, inner, ...): TP-shard the inner dim when divisible
+        inner = leaf.shape[2]
+        tp = plan.tp_axis if (plan.tp_axis and inner % plan.tp_size == 0
+                              and inner >= plan.tp_size) else None
+        return P(None, b, tp, *([None] * (nd - 3)))
+    if nd == 2:
+        return P(None, b)
+    return P()
+
+
+def build_model(arch: str | ArchConfig) -> Model:
+    cfg = arch if isinstance(arch, ArchConfig) else get_arch(arch)
+    return Model(cfg=cfg, defs=tf.model_defs(cfg))

@@ -1,0 +1,84 @@
+"""Parameter definition trees.
+
+Every parameter is declared once as a :class:`ParamDef` carrying its shape
+and *logical axes* (e.g. ``("layers", "embed", "heads")``); the sharding
+planner (repro.core.planner) maps logical axes to mesh axes. From one
+definition tree we derive:
+
+* ``abstract(defs, dtype)``   — ShapeDtypeStructs (dry-run: no allocation),
+* ``initialize(defs, rng)``   — real arrays (smoke tests / examples),
+* ``specs(defs, plan)``       — PartitionSpec tree,
+* ``count(defs)``             — exact parameter count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDef", "abstract", "initialize", "specs", "count",
+           "tree_paths"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract(defs, dtype) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(dtype)),
+        defs, is_leaf=_is_def)
+
+
+def specs(defs, plan) -> Any:
+    return jax.tree.map(lambda d: plan.spec(*d.axes), defs, is_leaf=_is_def)
+
+
+def count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def tree_paths(defs) -> Dict[str, ParamDef]:
+    out: Dict[str, ParamDef] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            defs, is_leaf=_is_def)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def initialize(defs, rng, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+    dt = jnp.dtype(dtype)
+
+    def mk(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(1, d.shape[-1])
+        std = d.scale / np.sqrt(fan_in)
+        if d.init == "embed":
+            std = d.scale
+        if d.init == "small":
+            std = 0.02 * d.scale
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt)
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])

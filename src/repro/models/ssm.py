@@ -1,0 +1,160 @@
+"""Mamba selective-SSM block (for the jamba hybrid arch).
+
+Training uses a chunked scan: a sequential `lax.scan` over fixed-size time
+chunks carrying the (B, di, N) state, with an associative scan *inside* each
+chunk — the pure-JAX reference of the fused Pallas `ssm_scan` kernel
+(HBM-resident states never materialize for the whole sequence; the inner
+dim is TP-sharded per the planner). Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.context import Ctx
+from repro.models.params import ParamDef
+
+__all__ = ["mamba_defs", "mamba_apply", "mamba_decode_step", "MambaState",
+           "mamba_init_state", "dt_rank"]
+
+SSM_CHUNK = 256
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return max(16, cfg.d_model // 16)
+
+
+class MambaState(NamedTuple):
+    h: jax.Array  # (B, di, N) SSM state
+    conv: jax.Array  # (B, d_conv-1, di) rolling conv window
+
+
+def mamba_defs(cfg: ArchConfig, stacked: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.d_state
+    R = dt_rank(cfg)
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    return {
+        "in_proj": ParamDef((*lead, d, 2 * di), (*la, "embed", "inner")),
+        "conv_w": ParamDef((*lead, cfg.d_conv, di), (*la, None, "inner"),
+                           init="small"),
+        "conv_b": ParamDef((*lead, di), (*la, "inner"), init="zeros"),
+        "x_proj": ParamDef((*lead, di, R + 2 * N), (*la, "inner", None)),
+        "dt_proj": ParamDef((*lead, R, di), (*la, None, "inner"),
+                            init="small"),
+        "dt_bias": ParamDef((*lead, di), (*la, "inner"), init="zeros"),
+        "A_log": ParamDef((*lead, di, N), (*la, "inner", None), init="small"),
+        "D": ParamDef((*lead, di), (*la, "inner"), init="ones"),
+        "out_proj": ParamDef((*lead, di, d), (*la, "inner", "embed")),
+    }
+
+
+def _ssm_inputs(cfg: ArchConfig, p: Dict, xb: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """xb: (..., di) conv output -> (dt, B, C, A) in float32."""
+    N = cfg.d_state
+    R = dt_rank(cfg)
+    proj = (xb @ p["x_proj"]).astype(jnp.float32)
+    dt_low, Bc, Cc = (proj[..., :R], proj[..., R:R + N], proj[..., R + N:])
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (..., di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+    return dt, Bc, Cc, A
+
+
+def _causal_conv(cfg: ArchConfig, p: Dict, x: jax.Array,
+                 window: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over time. x: (B, L, di)."""
+    K = cfg.d_conv
+    if window is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = window
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i]
+              for i in range(K))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_apply(cfg: ArchConfig, p: Dict, x: jax.Array, ctx: Ctx
+                ) -> jax.Array:
+    """Full-sequence (training/prefill) pass. x: (B, L, d)."""
+    B, L, d = x.shape
+    di = cfg.ssm_expand * d
+    N = cfg.d_state
+    xz = x @ p["in_proj"]
+    xb, z = xz[..., :di], xz[..., di:]
+    xb = ctx.constrain(xb, "batch", None, "inner")
+    xb = _causal_conv(cfg, p, xb)
+
+    dt, Bc, Cc, A = _ssm_inputs(cfg, p, xb)
+    xf = xb.astype(jnp.float32)
+    # per-step transition a_t = exp(dt*A): (B,L,di,N); input b_t = dt*B_t*x_t
+    chunk = min(SSM_CHUNK, L)
+    n_chunks = -(-L // chunk)
+    pad = n_chunks * chunk - L
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_step(h, inp):
+        dt_c, B_c, C_c, x_c = inp  # (B, c, ...)
+        a = jnp.exp(dt_c[..., None] * A)  # (B,c,di,N)
+        b = (dt_c * x_c)[..., None] * B_c[..., None, :]  # (B,c,di,N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_cum * h[:, None] + b_cum  # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_c)
+        return hs[:, -1], y
+
+    shp = (B, n_chunks, chunk)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, h0,
+        (dt.reshape(*shp, di).transpose(1, 0, 2, 3),
+         Bc.reshape(*shp, N).transpose(1, 0, 2, 3),
+         Cc.reshape(*shp, N).transpose(1, 0, 2, 3),
+         xf.reshape(*shp, di).transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, di)[:, :L]
+    y = y + xf[:, :L] * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    di = cfg.ssm_expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, di), jnp.dtype(dtype)))
+
+
+def mamba_decode_step(cfg: ArchConfig, p: Dict, x_t: jax.Array,
+                      state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """One-token recurrence. x_t: (B, 1, d)."""
+    di = cfg.ssm_expand * cfg.d_model
+    xz = x_t @ p["in_proj"]
+    xb, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([state.conv, xb], axis=1)  # (B, K, di)
+    conv = sum(window[:, i] * p["conv_w"][i] for i in range(cfg.d_conv))
+    xb1 = jax.nn.silu(conv + p["conv_b"])[:, None]  # (B,1,di)
+    dt, Bc, Cc, A = _ssm_inputs(cfg, p, xb1)
+    a = jnp.exp(dt[..., None] * A)[:, 0]  # (B,di,N)
+    b = ((dt * xb1.astype(jnp.float32))[..., None]
+         * Bc[..., None, :])[:, 0]
+    h = a * state.h + b
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + xb1.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y.astype(x_t.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, MambaState(h=h, conv=window[:, 1:])

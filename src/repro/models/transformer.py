@@ -1,0 +1,536 @@
+"""Model assembly: decoder-only LMs (dense/MoE/VLM), the jamba hybrid,
+the xLSTM stack, and the whisper encoder-decoder.
+
+All stacks scan over *stacked* layer parameters (compile time independent of
+depth); heterogeneous archs scan over homogeneous *groups* (jamba: 7 mamba +
+1 attention per group; xlstm: 3 mLSTM + 1 sLSTM). Remat policy wraps the
+scan body (the planner's materialization-point decision).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import xlstm as xl
+from repro.models.attention import (attn_defs, attn_project_qkv,
+                                    attention_block, cross_attention_block,
+                                    decode_attention)
+from repro.models.context import Ctx
+from repro.models.layers import (apply_norm, embed_defs, embed_lookup,
+                                 ffn_apply, ffn_defs, logits, norm_def, rope)
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.params import ParamDef
+from repro.models.ssm import (MambaState, mamba_apply, mamba_decode_step,
+                              mamba_defs, mamba_init_state)
+
+__all__ = ["model_defs", "forward", "decode_step", "init_decode_state",
+           "encode_whisper", "DecodeState"]
+
+
+class DecodeState(NamedTuple):
+    """Pytree of per-layer decode state (stacked along the layer/group dim).
+
+    With int8 KV quantization (kv_dtype="int8"), k/v_cache are int8 and
+    k/v_scale hold per-(token, kv-head) absmax scales — KV HBM traffic per
+    decoded token drops ~1.94x (hd bytes 2->1 + 4/hd scale)."""
+    k_cache: Optional[jax.Array] = None  # (L_attn, B, Smax, K, hd)
+    v_cache: Optional[jax.Array] = None
+    length: Optional[jax.Array] = None  # (B,)
+    k_scale: Optional[jax.Array] = None  # (L_attn, B, Smax, K) f32, int8 KV
+    v_scale: Optional[jax.Array] = None
+    mamba: Optional[MambaState] = None  # stacked (L_mamba, ...)
+    mlstm: Optional[xl.MLSTMState] = None
+    slstm: Optional[xl.SLSTMState] = None
+    enc_out: Optional[jax.Array] = None  # whisper encoder output
+
+
+# ===================================================================== defs
+def _mixer_defs(cfg: ArchConfig, n_stack: int, moe_layer: bool) -> Dict:
+    return (moe_defs(cfg, n_stack) if moe_layer else ffn_defs(cfg, n_stack))
+
+
+def model_defs(cfg: ArchConfig) -> Dict:
+    defs: Dict[str, Any] = {"embed": embed_defs(cfg),
+                            "final_norm": norm_def(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        n = cfg.n_layers
+        blocks = {"ln1": norm_def(cfg, n), "attn": attn_defs(cfg, n),
+                  "ln2": norm_def(cfg, n)}
+        if cfg.is_moe and cfg.moe_period == 1:
+            blocks["moe"] = moe_defs(cfg, n)
+        else:
+            blocks["mlp"] = ffn_defs(cfg, n)
+        defs["blocks"] = blocks
+    elif fam == "hybrid":
+        g = cfg.attn_period  # layers per group (e.g. 8: 7 mamba + 1 attn)
+        ng = cfg.n_layers // g
+        n_moe = g // cfg.moe_period
+        n_dense = g - n_moe
+        defs["groups"] = {
+            "mamba_ln": norm_def(cfg, ng * (g - 1)),
+            "mamba": _stack_reshape(mamba_defs(cfg, ng * (g - 1))),
+            "attn_ln": norm_def(cfg, ng),
+            "attn": attn_defs(cfg, ng),
+            "moe_ln": norm_def(cfg, ng * n_moe),
+            "moe": moe_defs(cfg, ng * n_moe),
+            "mlp_ln": norm_def(cfg, ng * n_dense),
+            "mlp": ffn_defs(cfg, ng * n_dense),
+        }
+    elif fam == "ssm":  # xlstm
+        g = cfg.slstm_period or cfg.n_layers
+        ng = cfg.n_layers // g
+        defs["groups"] = {
+            "mlstm_ln": norm_def(cfg, ng * (g - 1)),
+            "mlstm": xl.mlstm_defs(cfg, ng * (g - 1)),
+            "slstm_ln": norm_def(cfg, ng),
+            "slstm": xl.slstm_defs(cfg, ng),
+        }
+    elif fam == "audio":  # whisper enc-dec
+        ne, nd = cfg.encoder_layers, cfg.n_layers
+        defs["encoder"] = {"ln1": norm_def(cfg, ne), "attn": attn_defs(cfg, ne),
+                           "ln2": norm_def(cfg, ne), "mlp": ffn_defs(cfg, ne)}
+        defs["enc_final_norm"] = norm_def(cfg)
+        defs["decoder"] = {"ln1": norm_def(cfg, nd), "attn": attn_defs(cfg, nd),
+                           "lnx": norm_def(cfg, nd),
+                           "xattn": attn_defs(cfg, nd),
+                           "ln2": norm_def(cfg, nd), "mlp": ffn_defs(cfg, nd)}
+    else:
+        raise ValueError(fam)
+    return defs
+
+
+def _stack_reshape(defs):
+    return defs  # stacked defs already carry the leading dim
+
+
+def _maybe_remat(cfg: ArchConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _take(tree, idx):
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+# ================================================================== forward
+def forward(cfg: ArchConfig, params: Dict, batch: Dict, ctx: Ctx,
+            last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits_f32, aux_loss).
+
+    last_only=True (prefill): the LM head is applied to the final position
+    only, so no (B, S, V) logits buffer ever materializes."""
+    fam = cfg.family
+    if fam == "audio":
+        return _whisper_forward(cfg, params, batch, ctx, last_only)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens)
+    if fam == "vlm" and "patches" in batch:
+        P = cfg.n_patches
+        patches = batch["patches"] + params["embed"]["patch_pos"]
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, P:]], axis=1)
+    if cfg.pos_embedding == "learned":
+        x = x + params["embed"]["positions"][:S]
+    x = ctx.constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    if fam in ("dense", "moe", "vlm"):
+        x, aux = _uniform_stack(cfg, params["blocks"], x, positions, ctx)
+    elif fam == "hybrid":
+        x, aux = _jamba_stack(cfg, params["groups"], x, positions, ctx)
+    elif fam == "ssm":
+        x, aux = _xlstm_stack(cfg, params["groups"], x, ctx)
+    else:
+        raise ValueError(fam)
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(cfg, params["final_norm"], x)
+    return logits(cfg, params["embed"], x), aux
+
+
+def _uniform_stack(cfg, blocks, x, positions, ctx):
+    moe = cfg.is_moe and cfg.moe_period == 1
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h = ctx.constrain(h, "batch", None, None)
+        a = attention_block(cfg, layer_p["attn"],
+                            apply_norm(cfg, layer_p["ln1"], h), positions,
+                            causal=True, use_flash=ctx.use_flash)
+        h = h + a
+        z = apply_norm(cfg, layer_p["ln2"], h)
+        if moe:
+            m, al = moe_apply(cfg, layer_p["moe"], z, ctx)
+            aux = aux + al
+        else:
+            m = ffn_apply(cfg, layer_p["mlp"], z)
+        return (h + m, aux), None
+
+    (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, body),
+                               (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def _jamba_stack(cfg, groups, x, positions, ctx):
+    g = cfg.attn_period
+    ng = cfg.n_layers // g
+    n_moe = g // cfg.moe_period
+
+    def body(carry, gp):
+        h, aux = carry
+        im = id_moe = id_mlp = 0
+        for i in range(g):
+            is_attn = (i == g - 1)
+            if is_attn:
+                z = apply_norm(cfg, _take(gp["attn_ln"], 0), h)
+                h = h + attention_block(cfg, _take(gp["attn"], 0), z, positions,
+                                        causal=True, use_flash=ctx.use_flash)
+            else:
+                z = apply_norm(cfg, _take(gp["mamba_ln"], im), h)
+                h = h + mamba_apply(cfg, _take(gp["mamba"], im), z, ctx)
+                im += 1
+            if i % cfg.moe_period == cfg.moe_period - 1:
+                z = apply_norm(cfg, _take(gp["moe_ln"], id_moe), h)
+                m, al = moe_apply(cfg, _take(gp["moe"], id_moe), z, ctx)
+                aux = aux + al
+                id_moe += 1
+            else:
+                z = apply_norm(cfg, _take(gp["mlp_ln"], id_mlp), h)
+                m = ffn_apply(cfg, _take(gp["mlp"], id_mlp), z)
+                id_mlp += 1
+            h = h + m
+        return (h, aux), None
+
+    stacked = _regroup(cfg, groups, ng)
+    (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, body),
+                               (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def _xlstm_stack(cfg, groups, x, ctx):
+    g = cfg.slstm_period or cfg.n_layers
+    ng = cfg.n_layers // g
+
+    def body(carry, gp):
+        h, aux = carry
+        for i in range(g - 1):
+            z = apply_norm(cfg, _take(gp["mlstm_ln"], i), h)
+            h = h + xl.mlstm_apply(cfg, _take(gp["mlstm"], i), z, ctx)
+        z = apply_norm(cfg, _take(gp["slstm_ln"], 0), h)
+        h = h + xl.slstm_apply(cfg, _take(gp["slstm"], 0), z, ctx)
+        return (h, aux), None
+
+    stacked = _regroup(cfg, groups, ng)
+    (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, body),
+                               (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def _group_kmap(cfg: ArchConfig) -> Dict[str, int]:
+    """Per-subtree layers-per-group for heterogeneous (grouped) stacks."""
+    if cfg.family == "hybrid":
+        g = cfg.attn_period
+        n_moe = g // cfg.moe_period
+        return {"mamba_ln": g - 1, "mamba": g - 1, "attn_ln": 1, "attn": 1,
+                "moe_ln": n_moe, "moe": n_moe, "mlp_ln": g - n_moe,
+                "mlp": g - n_moe}
+    if cfg.family == "ssm":
+        g = cfg.slstm_period or cfg.n_layers
+        return {"mlstm_ln": g - 1, "mlstm": g - 1, "slstm_ln": 1, "slstm": 1}
+    raise ValueError(cfg.family)
+
+
+def _regroup(cfg: ArchConfig, groups: Dict, ng: int) -> Dict:
+    """Reshape stacked leaves (ng*k, ...) -> (ng, k, ...) for group scan;
+    k==1 subtrees stay (ng, ...)."""
+    kmap = _group_kmap(cfg)
+    out = {}
+    for key, sub in groups.items():
+        k = kmap[key]
+        out[key] = jax.tree.map(
+            lambda x: x.reshape(ng, k, *x.shape[1:]), sub)
+    return out
+
+
+# ------------------------------------------------------------------ whisper
+def encode_whisper(cfg: ArchConfig, params: Dict, frames: jax.Array,
+                   ctx: Ctx) -> jax.Array:
+    """frames: (B, encoder_len, d) stub embeddings -> encoder output."""
+    x = frames + params["embed"]["enc_positions"][: frames.shape[1]]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, layer_p):
+        a = attention_block(cfg, layer_p["attn"],
+                            apply_norm(cfg, layer_p["ln1"], h), positions,
+                            causal=False, use_flash=False)
+        h = h + a
+        h = h + ffn_apply(cfg, layer_p["mlp"],
+                          apply_norm(cfg, layer_p["ln2"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["encoder"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def _whisper_forward(cfg, params, batch, ctx, last_only: bool = False):
+    enc = encode_whisper(cfg, params, batch["frames"], ctx)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens)
+    x = x + params["embed"]["positions"][:S]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, layer_p):
+        h = h + attention_block(cfg, layer_p["attn"],
+                                apply_norm(cfg, layer_p["ln1"], h), positions,
+                                causal=True, use_flash=ctx.use_flash)
+        h = h + cross_attention_block(cfg, layer_p["xattn"],
+                                      apply_norm(cfg, layer_p["lnx"], h), enc)
+        h = h + ffn_apply(cfg, layer_p["mlp"],
+                          apply_norm(cfg, layer_p["ln2"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["decoder"])
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(cfg, params["final_norm"], x)
+    return logits(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+# =============================================================== decode step
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype="bfloat16",
+                      kv_dtype: Optional[str] = None) -> DecodeState:
+    dt = jnp.dtype(dtype)
+    kv_dt = jnp.dtype(kv_dtype) if kv_dtype else dt
+    hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
+    fam = cfg.family
+    length = jnp.zeros((batch,), jnp.int32)
+    if fam in ("dense", "moe", "vlm", "audio"):
+        L = cfg.n_layers
+        shape = (L, batch, max_seq, K, hd)
+        enc = (jnp.zeros((batch, cfg.encoder_len, cfg.d_model), dt)
+               if fam == "audio" else None)
+        scales = (jnp.ones((L, batch, max_seq, K), jnp.float32)
+                  if kv_dt == jnp.int8 else None)
+        return DecodeState(k_cache=jnp.zeros(shape, kv_dt),
+                           v_cache=jnp.zeros(shape, kv_dt), length=length,
+                           k_scale=scales, v_scale=scales,
+                           enc_out=enc)
+    if fam == "hybrid":
+        g = cfg.attn_period
+        ng = cfg.n_layers // g
+        n_mamba = ng * (g - 1)
+        shape = (ng, batch, max_seq, K, hd)
+        mamba = jax.vmap(lambda _: mamba_init_state(cfg, batch, dt))(
+            jnp.arange(n_mamba))
+        return DecodeState(k_cache=jnp.zeros(shape, dt),
+                           v_cache=jnp.zeros(shape, dt), length=length,
+                           mamba=mamba)
+    if fam == "ssm":
+        g = cfg.slstm_period or cfg.n_layers
+        ng = cfg.n_layers // g
+        ml = jax.vmap(lambda _: xl.mlstm_init_state(cfg, batch, dt))(
+            jnp.arange(ng * (g - 1)))
+        sl = jax.vmap(lambda _: xl.slstm_init_state(cfg, batch, dt))(
+            jnp.arange(ng))
+        return DecodeState(length=length, mlstm=ml, slstm=sl)
+    raise ValueError(fam)
+
+
+def _quantize_kv(x):
+    """x: (B, K, hd) -> (int8 values, (B, K) f32 scales)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _attn_decode(cfg, p, z, k_l, v_l, length, ctx, ks_l=None, vs_l=None):
+    """One-token attention for one layer; returns (out, k_l, v_l[, scales]).
+
+    int8 KV path: caches hold int8 + per-(token, head) scales; new tokens
+    are quantized on write, the cache is dequantized for the attention
+    matmuls (on TPU the dequant fuses into the score computation)."""
+    B = z.shape[0]
+    q, k, v = attn_project_qkv(cfg, p, z)
+    if cfg.pos_embedding == "rope":
+        pos = length[:, None]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    b_idx = jnp.arange(B)
+    int8_kv = k_l.dtype == jnp.int8
+    if int8_kv:
+        qk, sk = _quantize_kv(k[:, 0])
+        qv, sv = _quantize_kv(v[:, 0])
+        k_l = k_l.at[b_idx, length].set(qk)
+        v_l = v_l.at[b_idx, length].set(qv)
+        ks_l = ks_l.at[b_idx, length].set(sk)
+        vs_l = vs_l.at[b_idx, length].set(sv)
+        k_deq = (k_l.astype(jnp.float32)
+                 * ks_l[..., None]).astype(z.dtype)
+        v_deq = (v_l.astype(jnp.float32)
+                 * vs_l[..., None]).astype(z.dtype)
+        out = decode_attention(cfg, q, k_deq, v_deq, length + 1)
+        return out.reshape(B, 1, -1) @ p["wo"], k_l, v_l, ks_l, vs_l
+    k_l = k_l.at[b_idx, length].set(k[:, 0])
+    v_l = v_l.at[b_idx, length].set(v[:, 0])
+    out = decode_attention(cfg, q, k_l, v_l, length + 1)
+    return out.reshape(B, 1, -1) @ p["wo"], k_l, v_l, ks_l, vs_l
+
+
+def decode_step(cfg: ArchConfig, params: Dict, token: jax.Array,
+                state: DecodeState, ctx: Ctx
+                ) -> Tuple[jax.Array, DecodeState]:
+    """One decoding step. token: (B, 1) -> (logits (B,1,V), new state)."""
+    fam = cfg.family
+    B = token.shape[0]
+    x = embed_lookup(params["embed"], token)
+    if cfg.pos_embedding == "learned":
+        pos_emb = jnp.take(params["embed"]["positions"], state.length, axis=0)
+        x = x + pos_emb[:, None]
+    x = ctx.constrain(x, "batch", None, None)
+
+    if fam in ("dense", "moe", "vlm"):
+        moe = cfg.is_moe and cfg.moe_period == 1
+
+        int8_kv = state.k_cache.dtype == jnp.int8
+
+        def body(carry, xs):
+            h, = carry
+            layer_p, k_l, v_l, ks_l, vs_l = xs
+            z = apply_norm(cfg, layer_p["ln1"], h)
+            a, k_l, v_l, ks_l, vs_l = _attn_decode(
+                cfg, layer_p["attn"], z, k_l, v_l, state.length, ctx,
+                ks_l, vs_l)
+            h = h + a
+            z = apply_norm(cfg, layer_p["ln2"], h)
+            if moe:
+                m, _ = moe_apply(cfg, layer_p["moe"], z, ctx)
+            else:
+                m = ffn_apply(cfg, layer_p["mlp"], z)
+            return (h + m,), (k_l, v_l, ks_l, vs_l)
+
+        zeros = (state.k_scale if int8_kv
+                 else jnp.zeros((cfg.n_layers, 1), jnp.float32))
+        zeros_v = (state.v_scale if int8_kv
+                   else jnp.zeros((cfg.n_layers, 1), jnp.float32))
+        (x,), (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            body, (x,), (params["blocks"], state.k_cache, state.v_cache,
+                         zeros, zeros_v))
+        state = state._replace(
+            k_cache=k_new, v_cache=v_new, length=state.length + 1,
+            k_scale=ks_new if int8_kv else None,
+            v_scale=vs_new if int8_kv else None)
+
+    elif fam == "audio":
+        enc = state.enc_out
+
+        def body(carry, xs):
+            h, = carry
+            layer_p, k_l, v_l = xs
+            z = apply_norm(cfg, layer_p["ln1"], h)
+            a, k_l, v_l, _, _ = _attn_decode(cfg, layer_p["attn"], z, k_l,
+                                             v_l, state.length, ctx)
+            h = h + a
+            h = h + cross_attention_block(
+                cfg, layer_p["xattn"], apply_norm(cfg, layer_p["lnx"], h), enc)
+            h = h + ffn_apply(cfg, layer_p["mlp"],
+                              apply_norm(cfg, layer_p["ln2"], h))
+            return (h,), (k_l, v_l)
+
+        (x,), (k_new, v_new) = jax.lax.scan(
+            body, (x,), (params["decoder"], state.k_cache, state.v_cache))
+        state = state._replace(k_cache=k_new, v_cache=v_new,
+                               length=state.length + 1)
+
+    elif fam == "hybrid":
+        g = cfg.attn_period
+        ng = cfg.n_layers // g
+
+        def body(carry, xs):
+            h, = carry
+            gp, k_l, v_l, mamba_g = xs  # mamba_g: (g-1, ...) states
+            new_mamba = []
+            id_moe = id_mlp = 0
+            for i in range(g):
+                if i == g - 1:
+                    z = apply_norm(cfg, _take(gp["attn_ln"], 0), h)
+                    a, k_l, v_l, _, _ = _attn_decode(
+                        cfg, _take(gp["attn"], 0), z, k_l, v_l,
+                        state.length, ctx)
+                    h = h + a
+                else:
+                    z = apply_norm(cfg, _take(gp["mamba_ln"], i), h)
+                    y, st = mamba_decode_step(cfg, _take(gp["mamba"], i), z,
+                                              _take(mamba_g, i))
+                    new_mamba.append(st)
+                    h = h + y
+                if i % cfg.moe_period == cfg.moe_period - 1:
+                    z = apply_norm(cfg, _take(gp["moe_ln"], id_moe), h)
+                    m, _ = moe_apply(cfg, _take(gp["moe"], id_moe), z, ctx)
+                    id_moe += 1
+                else:
+                    z = apply_norm(cfg, _take(gp["mlp_ln"], id_mlp), h)
+                    m = ffn_apply(cfg, _take(gp["mlp"], id_mlp), z)
+                    id_mlp += 1
+                h = h + m
+            stacked_mamba = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_mamba)
+            return (h,), (k_l, v_l, stacked_mamba)
+
+        stacked = _regroup(cfg, params["groups"], ng)
+        mamba_states = jax.tree.map(
+            lambda x: x.reshape(ng, g - 1, *x.shape[1:]), state.mamba)
+        (x,), (k_new, v_new, mamba_new) = jax.lax.scan(
+            body, (x,), (stacked, state.k_cache, state.v_cache, mamba_states))
+        state = state._replace(
+            k_cache=k_new, v_cache=v_new, length=state.length + 1,
+            mamba=jax.tree.map(lambda x: x.reshape(-1, *x.shape[2:]),
+                               mamba_new))
+
+    elif fam == "ssm":
+        g = cfg.slstm_period or cfg.n_layers
+        ng = cfg.n_layers // g
+
+        def body(carry, xs):
+            h, = carry
+            gp, ml_g, sl_g = xs
+            new_ml = []
+            for i in range(g - 1):
+                z = apply_norm(cfg, _take(gp["mlstm_ln"], i), h)
+                y, st = xl.mlstm_decode_step(cfg, _take(gp["mlstm"], i), z,
+                                             _take(ml_g, i))
+                new_ml.append(st)
+                h = h + y
+            z = apply_norm(cfg, _take(gp["slstm_ln"], 0), h)
+            y, sl_new = xl.slstm_decode_step(cfg, _take(gp["slstm"], 0), z, sl_g)
+            h = h + y
+            return (h,), (jax.tree.map(lambda *xs: jnp.stack(xs), *new_ml),
+                          sl_new)
+
+        stacked = _regroup(cfg, params["groups"], ng)
+        ml_states = jax.tree.map(
+            lambda x: x.reshape(ng, g - 1, *x.shape[1:]), state.mlstm)
+        (x,), (ml_new, sl_new) = jax.lax.scan(
+            body, (x,), (stacked, ml_states, state.slstm))
+        state = state._replace(
+            length=state.length + 1, slstm=sl_new,
+            mlstm=jax.tree.map(lambda x: x.reshape(-1, *x.shape[2:]), ml_new))
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return logits(cfg, params["embed"], x), state

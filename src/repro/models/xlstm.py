@@ -1,0 +1,282 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence) per arXiv:2405.04517.
+
+mLSTM training uses the exact chunkwise-parallel form: within a chunk the
+decay matrix D_{ts} = F_t - F_s + i_s is applied to a quadratic
+(attention-like) term, with a log-space stabilizer `m`; across chunks a
+(dk, dv) state + normalizer + stabilizer are carried sequentially. sLSTM is
+inherently sequential (recurrent gate inputs) and uses `lax.scan` over time
+— noted in DESIGN.md; decode for both is O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.context import Ctx
+from repro.models.params import ParamDef
+
+__all__ = ["mlstm_defs", "mlstm_apply", "mlstm_init_state",
+           "mlstm_decode_step", "MLSTMState", "slstm_defs", "slstm_apply",
+           "slstm_init_state", "slstm_decode_step", "SLSTMState"]
+
+MLSTM_CHUNK = 64
+
+
+# ===================================================================== mLSTM
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, dk, dv)
+    n: jax.Array  # (B, H, dk)
+    m: jax.Array  # (B, H)
+    conv: jax.Array  # (B, d_conv-1, di)
+
+
+def mlstm_defs(cfg: ArchConfig, stacked: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.n_heads
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    return {
+        "up_proj": ParamDef((*lead, d, 2 * di), (*la, "embed", "inner")),
+        "conv_w": ParamDef((*lead, cfg.d_conv, di), (*la, None, "inner"),
+                           init="small"),
+        "conv_b": ParamDef((*lead, di), (*la, "inner"), init="zeros"),
+        "wq": ParamDef((*lead, di, di), (*la, "inner", None)),
+        "wk": ParamDef((*lead, di, di), (*la, "inner", None)),
+        "wv": ParamDef((*lead, di, di), (*la, "inner", None)),
+        "w_i": ParamDef((*lead, di, H), (*la, "inner", None), init="small"),
+        "w_f": ParamDef((*lead, di, H), (*la, "inner", None), init="small"),
+        "b_i": ParamDef((*lead, H), (*la, None), init="zeros"),
+        "b_f": ParamDef((*lead, H), (*la, None), init="ones"),
+        "ln_scale": ParamDef((*lead, di), (*la, "inner"), init="ones"),
+        "skip": ParamDef((*lead, di), (*la, "inner"), init="ones"),
+        "down_proj": ParamDef((*lead, di, d), (*la, "inner", "embed")),
+    }
+
+
+def _conv(cfg, p, x, window=None):
+    K = cfg.d_conv
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if window is None else window)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(K))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _headify(x: jax.Array, H: int) -> jax.Array:
+    B, L, di = x.shape
+    return x.reshape(B, L, H, di // H).transpose(0, 2, 1, 3)  # (B,H,L,dh)
+
+
+def _groupnorm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # per-head normalization over the feature dim; x: (B,H,L,dh)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def mlstm_apply(cfg: ArchConfig, p: Dict, x: jax.Array, ctx: Ctx
+                ) -> jax.Array:
+    B, L, d = x.shape
+    di = 2 * d
+    H = cfg.n_heads
+    dh = di // H
+    up = x @ p["up_proj"]
+    xb, z = up[..., :di], up[..., di:]
+    xc = _conv(cfg, p, xb)
+    q = _headify(xc @ p["wq"], H).astype(jnp.float32)
+    k = _headify(xc @ p["wk"], H).astype(jnp.float32) / jnp.sqrt(dh)
+    v = _headify(xb @ p["wv"], H).astype(jnp.float32)
+    # per-head scalar gates from the pre-activation features
+    li = (xb @ p["w_i"] + p["b_i"]).astype(jnp.float32)  # (B,L,H) log input
+    lf = jax.nn.log_sigmoid((xb @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+
+    c = min(MLSTM_CHUNK, L)
+    n_chunks = -(-L // c)
+    pad = n_chunks * c - L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    Lp = n_chunks * c
+
+    li = li.transpose(0, 2, 1).reshape(B, H, n_chunks, c)
+    lf = lf.transpose(0, 2, 1).reshape(B, H, n_chunks, c)
+    qc = q.reshape(B, H, n_chunks, c, dh)
+    kc = k.reshape(B, H, n_chunks, c, dh)
+    vc = v.reshape(B, H, n_chunks, c, dh)
+
+    def step(carry, inp):
+        C, n, m = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qb, kb, vb, lib, lfb = inp  # (B,H,c,*)
+        F = jnp.cumsum(lfb, axis=-1)  # (B,H,c)
+        # intra-chunk decay matrix D_ts = F_t - F_s + lf_s^{-1}... standard:
+        # D_{ts} = (F_t - F_s) + li_s for s<=t
+        Dm = F[..., :, None] - F[..., None, :] + lib[..., None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        Dm = jnp.where(tri, Dm, -jnp.inf)
+        # inter-chunk contribution decay: g_t = m + F_t
+        inter_log = m[..., None] + F  # (B,H,c)
+        m_new = jnp.maximum(Dm.max(-1), inter_log)  # (B,H,c) stabilizer
+        intra_w = jnp.exp(Dm - m_new[..., None])  # (B,H,c,c)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * intra_w
+        num = (jnp.einsum("bhts,bhsd->bhtd", scores, vb)
+               + jnp.exp(inter_log - m_new)[..., None]
+               * jnp.einsum("bhtd,bhdv->bhtv", qb, C))
+        den = (scores.sum(-1)
+               + jnp.exp(inter_log - m_new)
+               * jnp.einsum("bhtd,bhd->bht", qb, n))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # state update to end of chunk
+        Fc = F[..., -1]  # (B,H)
+        m_state = jnp.maximum(m + Fc, (Fc[..., None] - F + lib).max(-1))
+        w_in = jnp.exp(Fc[..., None] - F + lib - m_state[..., None])
+        C_new = (jnp.exp(m + Fc - m_state)[..., None, None] * C
+                 + jnp.einsum("bhs,bhsd,bhsv->bhdv", w_in, kb, vb))
+        n_new = (jnp.exp(m + Fc - m_state)[..., None] * n
+                 + jnp.einsum("bhs,bhsd->bhd", w_in, kb))
+        return (C_new, n_new, m_state), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(
+        step, (C0, n0, m0),
+        (qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+         vc.transpose(2, 0, 1, 3, 4), li.transpose(2, 0, 1, 3),
+         lf.transpose(2, 0, 1, 3)))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, Lp, dh)[:, :, :L]
+    h = _groupnorm(h).transpose(0, 2, 1, 3).reshape(B, L, di)
+    h = h.astype(x.dtype) * p["ln_scale"] + xc * p["skip"]
+    return (h * jax.nn.silu(z)) @ p["down_proj"]
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int, dtype) -> MLSTMState:
+    d = cfg.d_model
+    di, H = 2 * d, cfg.n_heads
+    dh = di // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.zeros((batch, H), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, di), jnp.dtype(dtype)))
+
+
+def mlstm_decode_step(cfg: ArchConfig, p: Dict, x_t: jax.Array,
+                      st: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    B = x_t.shape[0]
+    d = cfg.d_model
+    di, H = 2 * d, cfg.n_heads
+    dh = di // H
+    up = x_t @ p["up_proj"]
+    xb, z = up[..., :di], up[..., di:]
+    window = jnp.concatenate([st.conv, xb], axis=1)
+    xc = jax.nn.silu(sum(window[:, i] * p["conv_w"][i]
+                         for i in range(cfg.d_conv)) + p["conv_b"])[:, None]
+    q = (xc @ p["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xc @ p["wk"]).reshape(B, H, dh).astype(jnp.float32) / jnp.sqrt(dh)
+    v = (xb @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    li = (xb @ p["w_i"] + p["b_i"])[:, 0].astype(jnp.float32)  # (B,H)
+    lf = jax.nn.log_sigmoid((xb @ p["w_f"] + p["b_f"]))[:, 0].astype(jnp.float32)
+    m_new = jnp.maximum(lf + st.m, li)
+    fg = jnp.exp(lf + st.m - m_new)[..., None]
+    ig = jnp.exp(li - m_new)[..., None]
+    C = fg[..., None] * st.C + ig[..., None] * k[..., None] * v[..., None, :]
+    n = fg * st.n + ig * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = _groupnorm(h[:, :, None])[:, :, 0].reshape(B, 1, di)
+    h = h.astype(x_t.dtype) * p["ln_scale"] + xc * p["skip"]
+    y = (h * jax.nn.silu(z)) @ p["down_proj"]
+    return y, MLSTMState(C=C, n=n, m=m_new, conv=window[:, 1:])
+
+
+# ===================================================================== sLSTM
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, di)
+    n: jax.Array  # (B, di)
+    h: jax.Array  # (B, di)
+    m: jax.Array  # (B, di)
+
+
+def slstm_defs(cfg: ArchConfig, stacked: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    ffi = int(d * 4 / 3 // 8 * 8)
+    return {
+        "w_in": ParamDef((*lead, d, 4 * d), (*la, "embed", "inner")),
+        "r": ParamDef((*lead, H, dh, 4 * dh), (*la, None, None, None),
+                      init="small"),
+        "bias": ParamDef((*lead, 4 * d), (*la, "inner"), init="zeros"),
+        "ln_scale": ParamDef((*lead, d), (*la, None), init="ones"),
+        "ff_gate": ParamDef((*lead, d, ffi), (*la, "embed", "ff")),
+        "ff_up": ParamDef((*lead, d, ffi), (*la, "embed", "ff")),
+        "ff_down": ParamDef((*lead, ffi, d), (*la, "ff", "embed")),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z)
+
+
+def _slstm_cell(cfg: ArchConfig, p: Dict, x_t: jax.Array, st: SLSTMState
+                ) -> Tuple[jax.Array, SLSTMState]:
+    """x_t: (B, d) pre-activations step; returns (h, new state)."""
+    B, d = x_t.shape
+    H = cfg.n_heads
+    dh = d // H
+    hr = st.h.astype(jnp.float32).reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hdf->bhf", hr, p["r"].astype(jnp.float32))
+    pre = (x_t @ p["w_in"]).astype(jnp.float32) \
+        + rec.reshape(B, 4 * d) + p["bias"].astype(jnp.float32)
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    lf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(lf + st.m, ii)
+    ig = jnp.exp(ii - m_new)
+    fg = jnp.exp(lf + st.m - m_new)
+    c = fg * st.c + ig * zt
+    n = fg * st.n + ig
+    h = ot * c / jnp.maximum(n, 1.0)
+    return h, SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_apply(cfg: ArchConfig, p: Dict, x: jax.Array, ctx: Ctx
+                ) -> jax.Array:
+    """Sequential scan over time (sLSTM is not parallelizable; DESIGN.md)."""
+    B, L, d = x.shape
+
+    def step(st, x_t):
+        h, st = _slstm_cell(cfg, p, x_t, st)
+        return st, h
+
+    st0 = slstm_init_state(cfg, B, x.dtype)
+    _, hs = jax.lax.scan(step, st0, x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype) * p["ln_scale"]
+    # gated feed-forward (4/3 factor), part of the sLSTM block
+    ff = (jax.nn.gelu((x + h) @ p["ff_gate"], approximate=True)
+          * ((x + h) @ p["ff_up"])) @ p["ff_down"]
+    return h + ff
+
+
+def slstm_decode_step(cfg: ArchConfig, p: Dict, x_t: jax.Array,
+                      st: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    h, st = _slstm_cell(cfg, p, x_t[:, 0], st)
+    h = h[:, None].astype(x_t.dtype) * p["ln_scale"]
+    xin = x_t + h
+    ff = (jax.nn.gelu(xin @ p["ff_gate"], approximate=True)
+          * (xin @ p["ff_up"])) @ p["ff_down"]
+    return h + ff, st

@@ -1,0 +1,29 @@
+"""The PC object model, adapted (paper §3, §6; DESIGN.md §2).
+
+Host side: page-as-a-heap allocation, offset Handles, buffer pool, paged
+record stores, vector lists. Device side: the paged KV cache — HBM pages +
+block-table Handles with free-list recycling.
+"""
+from repro.objectmodel.page import (AllocPolicy, OutOfPageMemory, Page,
+                                    PageAllocator, DEFAULT_PAGE_SIZE)
+from repro.objectmodel.handle import (GLOBAL_TYPES, HANDLE_DTYPE, NULL_HANDLE,
+                                      Handle, TypeRegistry, deep_copy, deref,
+                                      make_object, make_vector)
+from repro.objectmodel.vectorlist import VectorList
+from repro.objectmodel.pool import BufferPool, PageState
+from repro.objectmodel.store import PagedSet, PagedStore
+from repro.objectmodel.kvcache import (DenseKVCache, KVCacheConfig,
+                                       KVPageManager, PagedKVState,
+                                       dense_append, gather_paged_kv,
+                                       init_dense_cache, init_paged_state,
+                                       paged_append)
+
+__all__ = [
+    "AllocPolicy", "OutOfPageMemory", "Page", "PageAllocator",
+    "DEFAULT_PAGE_SIZE", "GLOBAL_TYPES", "HANDLE_DTYPE", "NULL_HANDLE",
+    "Handle", "TypeRegistry", "deep_copy", "deref", "make_object",
+    "make_vector", "VectorList", "BufferPool", "PageState", "PagedSet",
+    "PagedStore", "DenseKVCache", "KVCacheConfig", "KVPageManager",
+    "PagedKVState", "dense_append", "gather_paged_kv", "init_dense_cache",
+    "init_paged_state", "paged_append",
+]

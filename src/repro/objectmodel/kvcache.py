@@ -1,0 +1,216 @@
+"""Device-side page-as-a-heap: the paged KV cache.
+
+This is the TPU-native realization of the PC object model (DESIGN.md §2):
+HBM is the buffer pool, KV pages are fixed-size allocation blocks, and block
+tables are vectors of offset Handles. Pages are recycled through a free list
+(the *recycling* allocation policy) — never compacted, never serialized.
+
+Two layouts:
+
+* ``dense``  — ``(L, B, S_max, Kv, Hd)`` contiguous per sequence. GSPMD
+  baseline: the sequence axis is sharded over the mesh.
+* ``paged``  — global pool ``(L, P, page, Kv, Hd)`` plus **per-shard block
+  tables**: the host :class:`KVPageManager` places pages round-robin across
+  model shards and hands each shard its own table, so shard-local attention
+  touches only resident pages (the optimized flash-decode path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["KVCacheConfig", "DenseKVCache", "PagedKVState", "KVPageManager",
+           "init_dense_cache", "init_paged_state", "dense_append",
+           "paged_append", "gather_paged_kv"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    max_seq_len: int
+    page_size: int = 128  # tokens per KV page
+    num_pages: int = 0  # paged layout pool size (global)
+    num_shards: int = 1  # model-axis shards owning page sub-pools
+    dtype: str = "bfloat16"
+
+    @property
+    def pages_per_seq(self) -> int:
+        return (self.max_seq_len + self.page_size - 1) // self.page_size
+
+    @property
+    def pages_per_shard(self) -> int:
+        assert self.num_pages % max(1, self.num_shards) == 0
+        return self.num_pages // max(1, self.num_shards)
+
+
+class DenseKVCache(NamedTuple):
+    k: jax.Array  # (L, B, S, Kv, Hd)
+    v: jax.Array
+    length: jax.Array  # (B,) int32 — tokens currently cached
+
+
+class PagedKVState(NamedTuple):
+    k_pages: jax.Array  # (L, P, page, Kv, Hd)
+    v_pages: jax.Array
+    # Per-shard tables: (shards, B, pages_per_seq_per_shard) LOCAL page ids,
+    # -1 = hole. Entry j of shard s holds the sequence's (j*shards+s)-th page.
+    block_tables: jax.Array
+    length: jax.Array  # (B,) int32
+
+
+def init_dense_cache(cfg: KVCacheConfig, batch: int) -> DenseKVCache:
+    shape = (cfg.n_layers, batch, cfg.max_seq_len, cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    return DenseKVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                        jnp.zeros((batch,), jnp.int32))
+
+
+def init_paged_state(cfg: KVCacheConfig, batch: int) -> PagedKVState:
+    assert cfg.num_pages > 0, "paged layout needs num_pages"
+    shape = (cfg.n_layers, cfg.num_pages, cfg.page_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    per_shard_slots = -(-cfg.pages_per_seq // max(1, cfg.num_shards))
+    tables = jnp.full((cfg.num_shards, batch, per_shard_slots), -1, jnp.int32)
+    return PagedKVState(jnp.zeros(shape, dt), jnp.zeros(shape, dt), tables,
+                        jnp.zeros((batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------- appends
+def dense_append(cache: DenseKVCache, k_new: jax.Array, v_new: jax.Array
+                 ) -> DenseKVCache:
+    """Write one token per sequence at position `length` (all layers at once).
+
+    k_new/v_new: (L, B, Kv, Hd).
+    """
+    L, B = k_new.shape[0], k_new.shape[1]
+    pos = cache.length  # (B,)
+    b_idx = jnp.arange(B)
+    k = cache.k.at[:, b_idx, pos].set(k_new)
+    v = cache.v.at[:, b_idx, pos].set(v_new)
+    return DenseKVCache(k, v, cache.length + 1)
+
+
+def paged_append(state: PagedKVState, k_new: jax.Array, v_new: jax.Array,
+                 physical_page: jax.Array) -> PagedKVState:
+    """Write one token per sequence into its current page.
+
+    ``physical_page``: (B,) int32 global page id of each sequence's tail page
+    (resolved by the host page manager — a Handle dereference).
+    k_new/v_new: (L, B, Kv, Hd).
+    """
+    B = k_new.shape[1]
+    slot = state.length % state.k_pages.shape[2]
+    b = jnp.arange(B)
+    k_pages = state.k_pages.at[:, physical_page, slot].set(k_new)
+    v_pages = state.v_pages.at[:, physical_page, slot].set(v_new)
+    return PagedKVState(k_pages, v_pages, state.block_tables, state.length + 1)
+
+
+def gather_paged_kv(state: PagedKVState, cfg: KVCacheConfig, seq: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Reference: reassemble sequence `seq`'s K/V from its pages (oracle for
+    the paged-attention kernel). Returns (L, S, Kv, Hd) pair."""
+    shards, _, slots = state.block_tables.shape
+    ps = cfg.page_size
+    chunks_k, chunks_v = [], []
+    for j in range(slots):
+        for s in range(shards):
+            local = state.block_tables[s, seq, j]
+            chunks_k.append(jnp.where(
+                local >= 0,
+                state.k_pages[:, s * cfg.pages_per_shard + jnp.maximum(local, 0)],
+                jnp.zeros_like(state.k_pages[:, 0])))
+            chunks_v.append(jnp.where(
+                local >= 0,
+                state.v_pages[:, s * cfg.pages_per_shard + jnp.maximum(local, 0)],
+                jnp.zeros_like(state.v_pages[:, 0])))
+    k = jnp.concatenate(chunks_k, axis=1)[:, : int(state.length[seq])]
+    v = jnp.concatenate(chunks_v, axis=1)[:, : int(state.length[seq])]
+    return k, v
+
+
+# ------------------------------------------------------------- host side
+class KVPageManager:
+    """Host allocator for the device page pool (the buffer-pool manager).
+
+    Pages are placed round-robin across shards so each sequence's pages are
+    spread evenly — every shard sees ~1/num_shards of every sequence, which
+    is what makes shard-local flash-decode load-balanced. Freed pages go on
+    per-shard free lists (the recycling policy)."""
+
+    def __init__(self, cfg: KVCacheConfig):
+        self.cfg = cfg
+        n = max(1, cfg.num_shards)
+        self.free: List[List[int]] = [
+            list(range(cfg.pages_per_shard))[::-1] for _ in range(n)]
+        self.owned: Dict[int, List[Tuple[int, int]]] = {}  # seq -> [(shard, local)]
+        self.written: Dict[int, int] = {}  # seq -> tokens written so far
+        self.next_shard: Dict[int, int] = {}
+
+    def pages_in_use(self) -> int:
+        return sum(len(v) for v in self.owned.values())
+
+    def allocate(self, seq: int, n_tokens: int) -> List[Tuple[int, int, int]]:
+        """Reserve capacity for `n_tokens` MORE tokens beyond those written;
+        returns new (shard, local_id, slot_index) placements."""
+        cur = self.owned.setdefault(seq, [])
+        written = self.written.setdefault(seq, 0)
+        need_pages = -(-(written + n_tokens) // self.cfg.page_size) - len(cur)
+        placed = []
+        shard = self.next_shard.get(seq, 0)
+        for _ in range(max(0, need_pages)):
+            if not self.free[shard % len(self.free)]:
+                # steal from the least-loaded shard (straggler mitigation)
+                candidates = sorted(range(len(self.free)),
+                                    key=lambda s: -len(self.free[s]))
+                if not self.free[candidates[0]]:
+                    raise MemoryError("KV page pool exhausted")
+                shard = candidates[0]
+            s = shard % len(self.free)
+            local = self.free[s].pop()
+            slot_index = sum(1 for (ps, _) in cur if ps == s)
+            cur.append((s, local))
+            placed.append((s, local, slot_index))
+            shard += 1
+        self.next_shard[seq] = shard
+        return placed
+
+    def advance(self, seq: int, n: int = 1) -> None:
+        """Record that `n` tokens were appended to `seq`'s pages."""
+        self.written[seq] = self.written.get(seq, 0) + n
+
+    def tail_physical_page(self, seq: int) -> int:
+        """Global page id receiving `seq`'s NEXT token (Handle resolution)."""
+        idx = self.written.get(seq, 0) // self.cfg.page_size
+        idx = min(idx, len(self.owned[seq]) - 1)
+        s, local = self.owned[seq][idx]
+        return s * self.cfg.pages_per_shard + local
+
+    def release(self, seq: int) -> int:
+        """Sequence finished: recycle all its pages; returns count."""
+        pages = self.owned.pop(seq, [])
+        for s, local in pages:
+            self.free[s].append(local)
+        self.next_shard.pop(seq, None)
+        self.written.pop(seq, None)
+        return len(pages)
+
+    def build_tables(self, batch_seqs: List[int]) -> np.ndarray:
+        """(shards, B, slots) local-id tables for the device."""
+        cfg = self.cfg
+        shards = max(1, cfg.num_shards)
+        slots = -(-cfg.pages_per_seq // shards)
+        t = np.full((shards, len(batch_seqs), slots), -1, np.int32)
+        for b, seq in enumerate(batch_seqs):
+            counters = [0] * shards
+            for (s, local) in self.owned.get(seq, []):
+                t[s, b, counters[s]] = local
+                counters[s] += 1
+        return t

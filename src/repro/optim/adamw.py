@@ -1,0 +1,92 @@
+"""Sharded AdamW.
+
+Moments mirror parameter sharding exactly (FSDP shards optimizer state for
+free — the "aggregation thread owns its hash partition" analogue: each chip
+updates only the parameter shard it owns). Moment dtypes are per-arch
+configurable (nemotron/jamba use bf16 first+second moments to fit HBM;
+DESIGN.md §6). Updates are computed in float32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update",
+           "opt_state_specs", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(abstract_params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return OptState(m=jax.tree.map(zeros, abstract_params),
+                    v=jax.tree.map(zeros, abstract_params),
+                    step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def opt_state_specs(param_specs) -> OptState:
+    from jax.sharding import PartitionSpec as P
+    return OptState(m=param_specs, v=param_specs, step=P())
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(grads, state: OptState, params, lr: jax.Array,
+                 cfg: AdamWConfig) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(new_m, new_v, step), metrics

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (warmup + cosine decay, constant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(1.0, total_steps - warmup_steps), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant(lr_value: float):
+    def lr(step):
+        return jnp.full((), lr_value, jnp.float32)
+    return lr

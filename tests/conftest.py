@@ -1,0 +1,7 @@
+"""Test config. IMPORTANT: no XLA_FLAGS here — smoke tests and benches see
+1 device; multi-device behaviour is tested via subprocesses that set
+REPRO_DRYRUN_DEVICES before importing jax (see test_multidevice.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,136 @@
+"""Checkpointing, supervised restart, stragglers, elastic resharding,
+data-loader recovery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.distributed import HeartbeatMonitor, Supervisor, rebalance_shards
+from repro.launch.train import train_loop
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3))}}
+    for s in (1, 2, 3):
+        ck.save(s, jax.tree.map(lambda x: x * s, state), {"note": s})
+    assert ck.steps() == [2, 3]  # gc kept last 2
+    got, extra = ck.restore(state)
+    np.testing.assert_allclose(np.asarray(got["a"]),
+                               np.asarray(state["a"]) * 3)
+    assert extra["note"] == 3
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.ones((128, 128))}
+    ck.save_async(5, state)
+    ck.wait()
+    assert ck.latest_step() == 5
+    # no tmp dirs left behind (atomic rename)
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    sup = Supervisor(ck, save_every=5, max_restarts=2)
+    crashes = {"n": 0}
+
+    def step_fn(state, step):
+        if step == 12 and crashes["n"] == 0:
+            crashes["n"] += 1
+            raise RuntimeError("node failure")
+        return {"x": state["x"] + 1}
+
+    state, rep = sup.run({"x": jnp.zeros(())}, step_fn, total_steps=20)
+    assert rep.restarts == 1
+    assert rep.restored_from == [10]  # last checkpoint before the crash
+    assert float(state["x"]) == 20  # steps replayed, none lost
+
+
+def test_supervisor_gives_up_after_budget(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    sup = Supervisor(ck, save_every=2, max_restarts=1)
+
+    def bad(state, step):
+        if step >= 4:
+            raise RuntimeError("persistent failure")
+        return state
+
+    with pytest.raises(RuntimeError):
+        sup.run({"x": jnp.zeros(())}, bad, total_steps=10)
+
+
+def test_end_to_end_training_with_injected_failure(tmp_path):
+    out = train_loop("xlstm_125m", steps=16, batch=4, seq=32,
+                     ckpt_dir=str(tmp_path), save_every=4,
+                     fail_at=None, log_every=100)
+    l_clean = out["losses"][-1]
+    out2 = train_loop("xlstm_125m", steps=16, batch=4, seq=32,
+                      ckpt_dir=str(tmp_path / "b"), save_every=4,
+                      fail_at=9, log_every=100)
+    assert out2["report"].restarts == 1
+    assert np.isfinite(out2["losses"][-1])
+    assert out2["losses"][-1] < out2["losses"][0]
+
+
+def test_straggler_detection_and_reassignment():
+    mon = HeartbeatMonitor(4, straggler_factor=2.0, timeout_s=100)
+    for step in range(5):
+        for w in range(4):
+            dur = 10.0 if w == 2 else 1.0  # worker 2 is slow
+            mon.beat(w, dur, now=step * 10.0)
+    plan = mon.check(now=50.0)
+    assert plan.stragglers == [2]
+    assert plan.reassign[2] in (0, 1, 3)
+
+
+def test_silent_worker_flagged():
+    mon = HeartbeatMonitor(3, timeout_s=5.0)
+    for w in range(3):
+        mon.beat(w, 1.0, now=0.0)
+    mon.beat(0, 1.0, now=10.0)
+    mon.beat(1, 1.0, now=10.0)
+    plan = mon.check(now=10.0)  # worker 2 silent for 10s
+    assert 2 in plan.stragglers
+
+
+def test_elastic_rebalance():
+    asg = rebalance_shards(n_pages=10, old_workers=4, new_workers=3,
+                           old_cursors={})
+    all_pages = sorted(p for ps in asg.values() for p in ps)
+    assert all_pages == list(range(10))
+    sizes = [len(v) for v in asg.values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_restore_into_different_dtype_template_fails_loudly(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.ones(3)})
+    with pytest.raises(AssertionError):
+        ck.restore({"a": jnp.ones(3), "b": jnp.ones(3)})
+
+
+def test_data_loader_cursor_recovery():
+    from repro.data import TokenPageWriter, TokenLoader
+    from repro.objectmodel import PagedStore
+    store = PagedStore()
+    w = TokenPageWriter(store, "s", seq_len=8)
+    for i in range(40):
+        w.add_document(list(range(i, i + 9)))
+    loader = TokenLoader(w.set, batch_size=4, seed=1)
+    it = iter(loader)
+    first = [next(it)["tokens"] for _ in range(3)]
+    st = loader.state()
+    # "crash": new loader, restore cursor -> continues where it left off
+    loader2 = TokenLoader(w.set, batch_size=4, seed=1)
+    loader2.restore(st)
+    nxt = next(iter(loader2))["tokens"]
+    it_ref = iter(TokenLoader(w.set, batch_size=4, seed=1))
+    for _ in range(3):
+        next(it_ref)
+    want = next(it_ref)["tokens"]
+    np.testing.assert_array_equal(nxt, want)

@@ -1,0 +1,104 @@
+"""Per-arch smoke tests (assignment requirement): a REDUCED config of each
+family runs one forward + one train step on CPU, asserting shapes and
+finiteness; plus decode-vs-forward consistency (teacher forcing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, reduced_config
+from repro.engine import TrainConfig, make_train_step
+from repro.models import Ctx, build_model
+from repro.optim import AdamWConfig, init_opt_state
+
+
+def _batch(cfg, B, S, rng):
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        b["frames"] = 0.01 * jax.random.normal(
+            rng, (B, cfg.encoder_len, cfg.d_model))
+    if cfg.family == "vlm":
+        b["patches"] = 0.01 * jax.random.normal(
+            rng, (B, cfg.n_patches, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(get_arch(arch))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng, "float32")
+    B, S = 2, 32
+    batch = _batch(cfg, B, S, rng)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN in forward"
+    # one jitted train step
+    opt = init_opt_state(params, AdamWConfig())
+    ts = jax.jit(make_train_step(model, Ctx(), TrainConfig()))
+    params2, opt2, _, metrics = ts(params, opt, None, batch)
+    assert np.isfinite(float(metrics["total_loss"])), f"{arch}: NaN loss"
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_last_only_matches_full(arch):
+    cfg = reduced_config(get_arch(arch))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init_params(rng, "float32")
+    batch = _batch(cfg, 2, 16, rng)
+    full, _ = model.forward(params, batch)
+    last, _ = model.forward(params, batch, last_only=True)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(last),
+                               rtol=2e-4, atol=2e-4)
+
+
+# decode-vs-forward consistency is exact for attention archs; recurrent
+# paths (chunked scan vs step recurrence) agree to tolerance.
+@pytest.mark.parametrize("arch,tol", [
+    ("phi3_mini", 2e-3), ("gemma_7b", 2e-3), ("qwen2_moe", 2e-3),
+    ("xlstm_125m", 2e-2), ("jamba15_large", 2e-2), ("whisper_small", 2e-3),
+])
+def test_decode_matches_teacher_forcing(arch, tol):
+    import dataclasses
+    cfg = reduced_config(get_arch(arch))
+    if cfg.is_moe:
+        # capacity drops depend on batch composition; lift the capacity so
+        # forward and decode route identically (no drops)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init_params(rng, "float32")
+    B, S = 2, 12
+    batch = _batch(cfg, B, S, rng)
+    fwd_logits, _ = model.forward(params, batch)
+    st = model.init_decode_state(B, S + 4, "float32")
+    if cfg.family == "audio":
+        st = st._replace(enc_out=model.encode(params, batch["frames"]))
+    step = jax.jit(model.decode_step)
+    dec = []
+    toks = batch["tokens"]
+    start = cfg.n_patches if cfg.family == "vlm" else 0
+    for t in range(S):
+        lg, st = step(params, toks[:, t:t + 1], st)
+        dec.append(lg[:, 0])
+    dec_logits = jnp.stack(dec, axis=1)
+    a = jax.nn.log_softmax(fwd_logits[:, :, :cfg.vocab_size], -1)
+    b = jax.nn.log_softmax(dec_logits[:, :, :cfg.vocab_size], -1)
+    err = float(jnp.abs(a - b).max())
+    assert err < tol, f"{arch}: decode/forward diverge, max {err}"
+
+
+def test_moe_capacity_overflow_drops_but_stays_finite():
+    import dataclasses
+    cfg = dataclasses.replace(reduced_config(get_arch("phi35_moe")),
+                              capacity_factor=0.25)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng, "float32")
+    logits, aux = model.forward(params, _batch(cfg, 2, 32, rng))
+    assert bool(jnp.isfinite(logits).all())
+    assert float(aux) > 0

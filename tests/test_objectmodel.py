@@ -1,0 +1,145 @@
+"""Object model unit tests: pages, policies, handles, pool, store."""
+import numpy as np
+import pytest
+
+from repro.objectmodel import (AllocPolicy, BufferPool, OutOfPageMemory, Page,
+                               PageAllocator, PagedStore, PageState,
+                               TypeRegistry, VectorList, deep_copy, deref,
+                               make_object, make_vector)
+from repro.objectmodel.handle import GLOBAL_TYPES, Handle
+
+
+def test_bump_allocation_and_oom():
+    p = Page(0, size=128, policy=AllocPolicy.NO_REUSE)
+    a = p.alloc(40)
+    b = p.alloc(40)
+    assert a % 8 == 0 and b % 8 == 0 and b >= a + 40
+    with pytest.raises(OutOfPageMemory):
+        p.alloc(64)
+
+
+def test_lightweight_reuse_recycles_freed_space():
+    p = Page(0, size=256, policy=AllocPolicy.LIGHTWEIGHT_REUSE)
+    a = p.alloc(64)
+    p.free(a, 64)
+    b = p.alloc(48)  # fits in the freed bucket
+    assert b == a
+
+
+def test_no_reuse_never_recycles():
+    p = Page(0, size=256, policy=AllocPolicy.NO_REUSE)
+    a = p.alloc(64)
+    p.free(a, 64)
+    b = p.alloc(64)
+    assert b != a
+
+
+def test_recycle_policy_per_type_freelist():
+    p = Page(0, size=512, policy=AllocPolicy.RECYCLE)
+    a = p.alloc(64, type_key="T")
+    p.free(a, 64, type_key="T")
+    b = p.alloc(64, type_key="T")
+    assert b == a  # exact-slot recycling
+    c = p.alloc(64, type_key="U")
+    assert c != a
+
+
+def test_refcounting_lifecycle():
+    p = Page(0, size=256)
+    off = p.alloc(32)
+    p.incref(off)
+    assert not p.decref(off, 32)  # still one ref
+    assert p.decref(off, 32)  # freed now
+    assert p.live_objects == 0
+
+
+def test_zero_cost_movement_offsets_survive():
+    """The paper's core claim: a page's bytes move verbatim and Handles
+    (offsets) remain valid at the receiving process."""
+    reg = TypeRegistry()
+    code = reg.register("Point", np.dtype([("x", np.float64),
+                                           ("y", np.float64)]))
+    alloc = PageAllocator(page_size=4096)
+    alloc.make_block()
+    h, n = make_vector(alloc, code, [(1.0, 2.0), (3.0, 4.0)], registry=reg)
+    payload = alloc.active.payload().copy()  # "send over the network"
+
+    recv = PageAllocator(page_size=4096)
+    page = Page.from_payload(h.page, payload, 4096)
+    recv.adopt(page)
+    v = deref(recv, h, count=n, registry=reg)  # same offset, new process
+    assert v["x"].tolist() == [1.0, 3.0]
+    assert v["y"].tolist() == [2.0, 4.0]
+
+
+def test_cross_block_assignment_deep_copies():
+    reg = TypeRegistry()
+    code = reg.register("D", np.dtype(np.float64))
+    alloc = PageAllocator(page_size=1024)
+    alloc.make_block()
+    h1 = make_object(alloc, code, 7.5, registry=reg)
+    alloc.make_block()  # h1's block becomes inactive
+    h2 = deep_copy(alloc, h1, registry=reg)
+    assert h2.page == alloc.active.page_id != h1.page
+    assert float(deref(alloc, h2, registry=reg)[0]) == 7.5
+
+
+def test_catalog_vtable_fetch():
+    master = TypeRegistry()
+    code = master.register("Emp", np.dtype([("salary", np.int64)]))
+    worker = TypeRegistry()
+    dt = worker.lookup_or_fetch(code, master)  # ships the ".so"
+    assert dt == master.dtype_of(code)
+    assert worker.remote_fetches == 1
+    worker.lookup_or_fetch(code, master)  # cached now
+    assert worker.remote_fetches == 1
+
+
+def test_buffer_pool_eviction_and_zombies():
+    spilled = []
+    pool = BufferPool(num_frames=3, page_size=256,
+                      spill=lambda p: spilled.append(p.page_id))
+    a = pool.get_page(PageState.CACHED)
+    aid = a.page_id
+    pool.unpin(aid)
+    z = pool.get_page(PageState.ZOMBIE)
+    zo = pool.get_page(PageState.ZOMBIE_OUTPUT)
+    # pool is full; zombies are pinned, only `a` is evictable
+    d = pool.get_page(PageState.CACHED)
+    assert pool.evictions == 1 and spilled == [aid]
+    assert pool.zombie_output_count() == 1
+    flushed = pool.flush_zombies()
+    assert set(flushed) == {z.page_id, zo.page_id}
+    assert pool.zombie_output_count() == 0
+
+
+def test_pool_exhaustion_raises():
+    pool = BufferPool(num_frames=2, page_size=64)
+    pool.get_page(PageState.ZOMBIE)
+    pool.get_page(PageState.ZOMBIE)
+    with pytest.raises(RuntimeError, match="pinned"):
+        pool.get_page(PageState.CACHED)
+
+
+def test_paged_store_spill_restore_is_byte_identical(tmp_path):
+    dt = np.dtype([("a", np.int64), ("b", np.float32)])
+    store = PagedStore(root=str(tmp_path), page_size=1 << 12)
+    rec = np.zeros(1000, dt)
+    rec["a"] = np.arange(1000)
+    rec["b"] = np.linspace(0, 1, 1000)
+    store.send_data("s", rec)
+    n_bytes = store.spill("s")
+    assert n_bytes >= rec.nbytes
+    store2 = PagedStore(root=str(tmp_path), page_size=1 << 12)
+    s2 = store2.restore("s", dt)
+    np.testing.assert_array_equal(s2.all_records(), rec)
+
+
+def test_vectorlist_contract():
+    vl = VectorList({"a": np.arange(10), "b": np.arange(10) * 2})
+    ext = vl.extended(("a",), "c", np.ones(10))
+    assert ext.names == ["a", "c"]
+    flt = vl.filtered(np.arange(10) % 2 == 0, ("a", "b"))
+    assert flt.num_rows == 5
+    with pytest.raises(ValueError):
+        vl.append("bad", np.arange(3))

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Executor, ScanSet, SelectionComp, WriteSet,
+                        compile_graph, make_lambda_from_member,
+                        make_lambda_from_self, optimize)
+from repro.engine.compression import (CompressionConfig, compress_grads,
+                                      init_error_state)
+from repro.objectmodel import AllocPolicy, Page, PagedStore
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- pages
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=200), min_size=1,
+                max_size=40))
+def test_page_allocations_never_overlap(sizes):
+    p = Page(0, size=1 << 14, policy=AllocPolicy.NO_REUSE)
+    spans = []
+    for s in sizes:
+        try:
+            off = p.alloc(s)
+        except Exception:
+            break
+        spans.append((off, off + s))
+    spans.sort()
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, "overlapping allocations"
+    assert all(a % 8 == 0 for a, _ in spans), "alignment violated"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=8, max_value=128), min_size=2,
+                max_size=20))
+def test_reuse_policy_never_leaks_past_capacity(sizes):
+    """alloc/free/alloc cycles must never exceed page capacity."""
+    p = Page(0, size=1 << 12, policy=AllocPolicy.LIGHTWEIGHT_REUSE)
+    for s in sizes:
+        off = p.alloc(s)
+        p.free(off, s)
+    assert p.occupied_bytes() <= p.size
+
+
+# ------------------------------------------------------------ optimizer
+class _ThresholdSel(SelectionComp):
+    def __init__(self, lo, hi):
+        super().__init__()
+        self.lo, self.hi = lo, hi
+
+    def get_selection(self, a):
+        v = make_lambda_from_member(a, "v")
+        return (v > self.lo) & ((v < self.hi) | (v == self.lo + 1)) \
+            & ~(v == self.hi - 1)
+
+    def get_projection(self, a):
+        return make_lambda_from_member(a, "v")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=300),
+       st.integers(-100, 100), st.integers(1, 200), st.integers(1, 5))
+def test_optimizer_preserves_semantics(values, lo, span, parts):
+    """For random data + random predicates: optimized == unoptimized ==
+    numpy oracle."""
+    hi = lo + span
+    dt = np.dtype([("v", np.int64)])
+    rec = np.zeros(len(values), dt)
+    rec["v"] = values
+    store = PagedStore()
+    store.send_data("s", rec)
+    sel = _ThresholdSel(lo, hi)
+    sel.set_input(ScanSet("db", "s", "Row"))
+    w = WriteSet("db", "out")
+    w.set_input(sel)
+    prog = compile_graph(w)
+    opt, _ = optimize(prog)
+    ex = Executor(store, num_partitions=parts, do_optimize=False)
+    a = np.sort(np.asarray(list(ex.execute_program(prog).values())[0]))
+    b = np.sort(np.asarray(list(ex.execute_program(opt).values())[0]))
+    v = rec["v"]
+    want = np.sort(v[(v > lo) & ((v < hi) | (v == lo + 1))
+                     & ~(v == hi - 1)])
+    np.testing.assert_array_equal(a, want)
+    np.testing.assert_array_equal(b, want)
+
+
+# ---------------------------------------------------------- compression
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["int8", "topk"]))
+def test_error_feedback_is_lossless_over_time(seed, scheme):
+    """Sum of decompressed grads converges to sum of true grads: the
+    residual is bounded, never lost (error feedback invariant)."""
+    rng = np.random.default_rng(seed)
+    g_true = [rng.normal(size=(32, 8)).astype(np.float32) for _ in range(12)]
+    params = {"w": jnp.zeros((32, 8))}
+    err = init_error_state(params)
+    cfg = CompressionConfig(scheme=scheme, topk_frac=0.25)
+    total_sent = np.zeros((32, 8), np.float32)
+    total_true = np.zeros((32, 8), np.float32)
+    for g in g_true:
+        sent, err = compress_grads({"w": jnp.asarray(g)}, err, cfg)
+        total_sent += np.asarray(sent["w"])
+        total_true += g
+    residual = np.abs(np.asarray(err["w"]))
+    np.testing.assert_allclose(total_sent + np.asarray(err["w"]),
+                               total_true, rtol=1e-4, atol=1e-4)
+    # residual stays bounded by one step's magnitude scale
+    assert residual.max() < 10.0
+
+
+# ----------------------------------------------------------- aggregation
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 15), st.floats(-100, 100)),
+                min_size=1, max_size=400))
+def test_segment_preaggregate_matches_numpy(pairs):
+    from repro.engine.aggregation import segment_preaggregate
+    keys = np.array([k for k, _ in pairs], np.int32)
+    vals = np.array([v for _, v in pairs], np.float32)
+    got = np.asarray(segment_preaggregate(jnp.asarray(keys),
+                                          jnp.asarray(vals), 16))
+    want = np.zeros(16, np.float64)
+    np.add.at(want, keys, vals.astype(np.float64))
+    # float32 accumulation on device vs float64 on host
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)

@@ -1,0 +1,163 @@
+"""TCAP compiler + rule-based optimizer: the paper's §7 rewrites, with
+result-equivalence guarantees."""
+import numpy as np
+import pytest
+
+from repro.core import (AggregateComp, Executor, JoinComp, NaiveExecutor,
+                        ScanSet, SelectionComp, WriteSet, compile_graph,
+                        make_lambda, make_lambda_from_member,
+                        make_lambda_from_method, make_lambda_from_self,
+                        optimize, register_method)
+from repro.objectmodel import PagedStore
+
+EMP_DT = np.dtype([("name", "S8"), ("dept", "S8"), ("salary", np.int64)])
+DEP_DT = np.dtype([("deptName", "S8"), ("rank", np.int64)])
+
+register_method("Emp", "getSalary")(lambda r: r["salary"])
+
+
+def _store(n=500, seed=0):
+    rng = np.random.default_rng(seed)
+    emps = np.zeros(n, EMP_DT)
+    emps["name"] = [f"e{i}".encode() for i in range(n)]
+    emps["dept"] = rng.choice([b"sales", b"eng", b"hr"], n)
+    emps["salary"] = rng.integers(30_000, 120_000, n)
+    deps = np.zeros(3, DEP_DT)
+    deps["deptName"] = [b"sales", b"eng", b"hr"]
+    deps["rank"] = [1, 2, 3]
+    store = PagedStore()
+    store.send_data("emps", emps)
+    store.send_data("deps", deps)
+    return store, emps, deps
+
+
+class SalaryBand(SelectionComp):
+    """The paper's redundant getSalary() example (§7)."""
+
+    def get_selection(self, a):
+        return ((make_lambda_from_method(a, "getSalary") > 50_000)
+                & (make_lambda_from_method(a, "getSalary") < 100_000))
+
+    def get_projection(self, a):
+        return make_lambda_from_self(a)
+
+
+class EmpDepJoin(JoinComp):
+    def __init__(self):
+        super().__init__(arity=2)
+
+    def get_selection(self, e, d):
+        return ((make_lambda_from_member(e, "dept")
+                 == make_lambda_from_member(d, "deptName"))
+                & (make_lambda_from_method(e, "getSalary") > 50_000))
+
+    def get_projection(self, e, d):
+        return make_lambda([e, d],
+                           lambda er, dr: er["salary"] + 1000 * dr["rank"],
+                           "bonus")
+
+
+class SalaryByDept(AggregateComp):
+    def get_key_projection(self, a):
+        return make_lambda_from_member(a, "dept")
+
+    def get_value_projection(self, a):
+        return make_lambda_from_member(a, "salary")
+
+
+def _graph_selection():
+    sel = SalaryBand()
+    sel.set_input(ScanSet("db", "emps", "Emp"))
+    w = WriteSet("db", "out")
+    w.set_input(sel)
+    return w
+
+
+def _graph_join():
+    j = EmpDepJoin()
+    j.set_input(0, ScanSet("db", "emps", "Emp"))
+    j.set_input(1, ScanSet("db", "deps", "Dep"))
+    w = WriteSet("db", "out")
+    w.set_input(j)
+    return w
+
+
+def test_compile_produces_paper_style_program():
+    prog = compile_graph(_graph_selection())
+    text = prog.to_text()
+    assert "APPLY" in text and "FILTER" in text
+    assert "methodCall" in text and "getSalary" in text
+    prog.validate()
+
+
+def test_cse_removes_redundant_method_call():
+    prog = compile_graph(_graph_selection())
+    n_calls_before = sum(1 for op in prog.ops
+                         if op.info.get("methodName") == "getSalary")
+    assert n_calls_before == 2  # user called it twice
+    opt, rep = optimize(prog)
+    n_calls_after = sum(1 for op in opt.ops
+                        if op.info.get("methodName") == "getSalary")
+    assert n_calls_after == 1 and rep.cse_removed >= 1
+
+
+def test_filter_pushdown_moves_predicate_before_hash():
+    prog = compile_graph(_graph_join())
+    opt, rep = optimize(prog)
+    assert rep.filters_pushed == 1
+    ops = opt.ops
+    flt_idx = [i for i, o in enumerate(ops)
+               if o.op == "FILTER" and o.info.get("pushed")]
+    join_idx = [i for i, o in enumerate(ops) if o.op == "JOIN"]
+    assert flt_idx and join_idx and flt_idx[0] < join_idx[0]
+
+
+@pytest.mark.parametrize("graph_fn", [_graph_selection, _graph_join])
+def test_optimized_program_is_equivalent(graph_fn):
+    store, emps, deps = _store()
+    prog = compile_graph(graph_fn())
+    opt, _ = optimize(prog)
+    ex = Executor(store, num_partitions=3, do_optimize=False)
+    r_un = ex.execute_program(prog)
+    r_op = ex.execute_program(opt)
+    (ka, va), (kb, vb) = list(r_un.items())[0], list(r_op.items())[0]
+    assert sorted(np.asarray(va).tolist()) == sorted(np.asarray(vb).tolist())
+
+
+def test_vectorized_matches_volcano():
+    store, emps, deps = _store(200)
+    prog = compile_graph(_graph_join())
+    fast = Executor(store, num_partitions=2).execute_program(prog)
+    slow = NaiveExecutor(store, num_partitions=2).execute_program(prog)
+    va = sorted(np.asarray(list(fast.values())[0]).tolist())
+    vb = sorted(np.asarray(list(slow.values())[0]).tolist())
+    assert va == vb
+
+
+def test_aggregation_two_stage_matches_numpy():
+    store, emps, _ = _store()
+    agg = SalaryByDept()
+    agg.set_input(ScanSet("db", "emps", "Emp"))
+    w = WriteSet("db", "out")
+    w.set_input(agg)
+    for P in (1, 3, 7):
+        r = Executor(store, num_partitions=P).execute(w)
+        got = dict(zip(r["key"].tolist(), np.asarray(r["value"]).tolist()))
+        for d in (b"sales", b"eng", b"hr"):
+            assert got[d] == emps["salary"][emps["dept"] == d].sum()
+
+
+def test_join_algorithms_agree():
+    store, emps, deps = _store()
+    prog = compile_graph(_graph_join())
+    small = Executor(store, num_partitions=3,
+                     broadcast_threshold_bytes=1 << 40)  # force broadcast
+    big = Executor(store, num_partitions=3,
+                   broadcast_threshold_bytes=0)  # force hash-partition
+    ra = small.execute_program(prog)
+    rb = big.execute_program(prog)
+    assert small.stats.broadcast_joins == 1
+    assert big.stats.hash_partition_joins == 1
+    va = sorted(np.asarray(list(ra.values())[0]).tolist())
+    vb = sorted(np.asarray(list(rb.values())[0]).tolist())
+    assert va == vb

@@ -39,8 +39,7 @@ def run(n=4096, dims=(8, 32), block=64, volcano_n=512):
         t_np, G_np = _time(lambda: X.T @ X)
         np.testing.assert_allclose(s.fetch(s.vars["G"]), G_np, rtol=1e-8)
         # volcano on a smaller slice (it is orders slower), scaled up
-        sv = LinAlgSession(block_size=block)
-        sv.ex = NaiveExecutor(sv.store, num_partitions=4)
+        sv = LinAlgSession(block_size=block, executor_cls=NaiveExecutor)
         sv.load("Xs", X[:volcano_n])
         t_vol, _ = _time(lambda: sv.run("Gs = Xs '* Xs"))
         t_vol_scaled = t_vol * (n / volcano_n)

@@ -6,6 +6,7 @@
   Tables 4-6 -> bench_ml         (LDA / GMM / k-means per iteration)
   §8.4/T8  -> bench_objectmodel  (zero-copy movement)
   kernels  -> bench_kernels      (flash vs materialized attention)
+  api      -> bench_api          (fluent front-end overhead vs raw executor)
   §Roofline -> roofline          (from dry-run artifacts, if present)
 """
 from __future__ import annotations
@@ -15,14 +16,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_linalg, bench_ml, bench_oo,
-                            bench_objectmodel)
+    from benchmarks import (bench_api, bench_kernels, bench_linalg, bench_ml,
+                            bench_oo, bench_objectmodel)
     suites = [
         ("linalg", bench_linalg.run),
         ("oo", bench_oo.run),
         ("ml", bench_ml.run),
         ("objectmodel", bench_objectmodel.run),
         ("kernels", bench_kernels.run),
+        ("api", bench_api.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,8 +1,9 @@
-"""Quickstart: the two faces of the platform in ~60 lines.
+"""Quickstart: the two faces of the platform in ~70 lines.
 
-1. *Declarative in the large* — a selection + aggregation over packed
-   records, written as lambda-term construction functions, optimized by
-   the rule engine, executed vectorized.
+1. *Declarative in the large* — a fluent, lazy Dataset chain: state WHAT to
+   compute; the Session compiles it to TCAP, optimizes with the rule
+   engine, plans physically, and executes vectorized. Repeated queries hit
+   the session's plan cache and skip recompilation.
 2. *High-performance in the small* — the same pages move zero-copy, and a
    model forward runs through the planner-sharded JAX engine.
 
@@ -10,10 +11,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (AggregateComp, Executor, ScanSet, SelectionComp,
-                        WriteSet, compile_graph, make_lambda_from_member,
-                        make_lambda_from_method, make_lambda_from_self,
-                        optimize, register_method)
+from repro.core import Session, make_lambda_from_method, register_method
 from repro.objectmodel import PagedStore
 
 # --- data: packed Employee records on pages (the PC object model) --------
@@ -23,16 +21,40 @@ emps = np.zeros(10_000, EMP)
 emps["name"] = [f"emp{i}".encode() for i in range(len(emps))]
 emps["dept"] = rng.choice([b"sales", b"eng", b"hr"], len(emps))
 emps["salary"] = rng.integers(30_000, 150_000, len(emps))
-store = PagedStore()
-store.send_data("employees", emps)
 
 # --- a "method" registered with the catalog (the .so shipping analogue) --
 register_method("Employee", "getSalary")(lambda rows: rows["salary"])
 
+# --- the fluent front-end: one declarative chain -------------------------
+# Note getSalary is invoked twice — the optimizer's CSE removes one.
+sess = Session(num_partitions=4)
+payroll = (sess.load("employees", emps, type_name="Employee")
+           .filter(lambda e: make_lambda_from_method(e, "getSalary") > 60_000)
+           .filter(lambda e: make_lambda_from_method(e, "getSalary") < 140_000)
+           .aggregate(key="dept", value="salary"))
+
+result = payroll.collect()
+rep = sess.last_report
+print(f"TCAP optimized: CSE removed {rep.cse_removed}, "
+      f"filters pushed {rep.filters_pushed}")
+for dept, total in zip(result["key"], result["value"]):
+    print(f"  {dept.decode():5s}: {int(total):>12,}")
+
+payroll.collect()  # same handle again: optimized plan comes from the cache
+print(f"plan cache after re-run: {sess.plan_cache_info()}")
+
+# explain() renders the optimized TCAP + physical plan without executing
+print("\n" + "\n".join(payroll.explain().splitlines()[-4:]))
+
+# --- under the hood: the stable Computation-subclass layer ---------------
+# Each chain method synthesizes one of these; a "capable systems
+# programmer" can still write them directly (the paper's two-level design):
+from repro.core import (AggregateComp, Executor, ScanSet, SelectionComp,
+                        WriteSet, make_lambda_from_member,
+                        make_lambda_from_self)
+
 
 class HighEarners(SelectionComp):
-    """Note: getSalary is called twice — the optimizer's CSE removes one."""
-
     def get_selection(self, emp):
         return ((make_lambda_from_method(emp, "getSalary") > 60_000)
                 & (make_lambda_from_method(emp, "getSalary") < 140_000))
@@ -49,20 +71,15 @@ class PayrollByDept(AggregateComp):
         return make_lambda_from_member(emp, "salary")
 
 
-sel = HighEarners()
-sel.set_input(ScanSet("db", "employees", "Employee"))
+store = PagedStore()
+store.send_data("employees", emps)
 agg = PayrollByDept()
-agg.set_input(sel)
+agg.set_input(HighEarners().set_input(ScanSet("db", "employees", "Employee")))
 writer = WriteSet("db", "payroll")
 writer.set_input(agg)
-
-prog = compile_graph(writer)
-opt, report = optimize(prog)
-print(f"TCAP: {len(prog)} ops -> {len(opt)} after optimization "
-      f"(CSE removed {report.cse_removed}, pushed {report.filters_pushed})")
-result = Executor(store, num_partitions=4).execute(writer)
-for dept, total in zip(result["key"], result["value"]):
-    print(f"  {dept.decode():5s}: {int(total):>12,}")
+hand = Executor(store, num_partitions=4).execute(writer)
+assert sorted(hand["key"]) == sorted(result["key"])
+print("\nsubclass layer produces identical results — same TCAP underneath")
 
 # --- and the training side: one step of a 10-arch model zoo -------------
 import jax

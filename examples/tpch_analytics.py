@@ -1,6 +1,6 @@
 """The paper's §8.4 object analytics: customers-per-supplier and top-k
-Jaccard over denormalized TPC-H-style nested objects, on the vectorized
-engine vs the volcano baseline.
+Jaccard over denormalized TPC-H-style nested objects, written against the
+fluent Session API, on the vectorized engine vs the volcano baseline.
 
 Run:  PYTHONPATH=src python examples/tpch_analytics.py
 """
@@ -9,18 +9,19 @@ import time
 import numpy as np
 
 from repro.apps.tpch import customers_per_supplier, load_tpch, topk_jaccard
+from repro.core import Session
 from repro.core.executor import Executor, NaiveExecutor
 from repro.data.synthetic import denormalized_tpch
 from repro.objectmodel import PagedStore
 
 cust, lines, n_supp, n_parts = denormalized_tpch(800, seed=4)
-store = PagedStore()
-cn, ln = load_tpch(store, cust, lines)
+sess = Session(num_partitions=4)
+cn, ln = load_tpch(sess.store, cust, lines, session=sess)
 print(f"dataset: {len(cust)} customers, {len(lines)} lineitems, "
       f"{n_supp} suppliers, {n_parts} parts")
 
 t0 = time.perf_counter()
-cps = customers_per_supplier(store, ln, n_parts)
+cps = customers_per_supplier(sess.store, ln, n_parts, session=sess)
 t_vec = time.perf_counter() - t0
 supp0 = sorted(cps)[0]
 print(f"customers-per-supplier: {len(cps)} suppliers in {t_vec*1e3:.0f} ms "
@@ -28,10 +29,11 @@ print(f"customers-per-supplier: {len(cps)} suppliers in {t_vec*1e3:.0f} ms "
 
 query = np.unique(lines["partkey"][:40])
 t0 = time.perf_counter()
-ids, scores = topk_jaccard(store, ln, n_parts, query, k=8)
+ids, scores = topk_jaccard(sess.store, ln, n_parts, query, k=8, session=sess)
 t_top = time.perf_counter() - t0
 print(f"top-8 Jaccard in {t_top*1e3:.0f} ms: "
       f"customers {ids.tolist()} scores {np.round(scores, 3).tolist()}")
+print(f"session plan cache: {sess.plan_cache_info()}")
 
 # volcano (record-at-a-time) comparison at reduced scale
 small_cust, small_lines, _, small_parts = denormalized_tpch(80, seed=4)

@@ -9,24 +9,52 @@ inverted on the driver, as lilLinAlg does.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (AggregateComp, Computation, Executor, JoinComp,
-                        ScanSet, TopKComp, WriteSet, make_lambda,
+from repro.core import (Executor, Session, make_lambda,
                         make_lambda_from_member)
 from repro.objectmodel import PagedStore
 
 __all__ = ["BlockMatrix", "LinAlgSession"]
 
-_set_counter = [0]
-
 
 def _block_dtype(bs: int) -> np.dtype:
     return np.dtype([("r", np.int64), ("c", np.int64),
                      ("data", np.float64, (bs, bs))])
+
+
+def _flatten_data(rows):
+    return rows["data"].reshape(len(rows), -1)
+
+
+def _flat_blocks(arg):
+    # module-level so repeated multiplies share the native-lambda identity
+    # (keeps the session plan cache effective across same-shape queries).
+    return make_lambda(arg, _flatten_data, "flat")
+
+
+@functools.lru_cache(maxsize=None)
+def _block_mul_fn(ta: bool, out_att: str, bs: int):
+    # memoized so every (ta, bs)-shaped multiply reuses one function
+    # object — the plan cache keys native lambdas by identity, so a fresh
+    # closure per call would miss (and pin a new entry) every time.
+    pair_dt = np.dtype([("key", np.int64),
+                        ("data", np.float64, (bs, bs))])
+
+    def mul(ar, br):
+        out = np.zeros(len(ar), pair_dt)
+        lhs = ar["data"]
+        if ta:
+            lhs = lhs.transpose(0, 2, 1)
+        out["data"] = np.matmul(lhs, br["data"])
+        out["key"] = ar[out_att] * (1 << 20) + br["c"]
+        return out
+
+    return mul
 
 
 @dataclasses.dataclass
@@ -43,12 +71,17 @@ class BlockMatrix:
 
 
 class LinAlgSession:
+    """Built on the fluent Session front-end: multiply is a ``join`` on the
+    inner block index feeding an ``aggregate`` (sum of block products);
+    nearest-neighbor is a ``top_k``. Set naming is session-scoped."""
+
     def __init__(self, store: Optional[PagedStore] = None,
                  num_partitions: int = 4, block_size: int = 128,
-                 do_optimize: bool = True):
-        self.store = store or PagedStore()
-        self.ex = Executor(self.store, num_partitions=num_partitions,
-                           do_optimize=do_optimize)
+                 do_optimize: bool = True, executor_cls=Executor):
+        self.sess = Session(store=store, num_partitions=num_partitions,
+                            do_optimize=do_optimize,
+                            executor_cls=executor_cls)
+        self.store = self.sess.store
         self.bs = block_size
         self.vars: Dict[str, BlockMatrix] = {}
 
@@ -66,8 +99,7 @@ class LinAlgSession:
                 blk[: chunk.shape[0], : chunk.shape[1]] = chunk
                 recs[idx] = (i, j, blk)
                 idx += 1
-        _set_counter[0] += 1
-        sname = f"{name}_{_set_counter[0]}"
+        sname = self.sess.fresh_set_name(name)
         self.store.send_data(sname, recs)
         mat = BlockMatrix(sname, n, m, bs)
         self.vars[name] = mat
@@ -92,52 +124,25 @@ class LinAlgSession:
         # join key: A's inner index vs B's row index
         inner_att = "r" if ta else "c"
         out_att = "c" if ta else "r"
-        pair_dt = np.dtype([("key", np.int64),
-                            ("data", np.float64, (bs, bs))])
+        mul = _block_mul_fn(ta, out_att, bs)
 
-        class MulJoin(JoinComp):
-            def __init__(self):
-                super().__init__(arity=2)
-
-            def get_selection(self, a, b):
-                return (make_lambda_from_member(a, inner_att)
-                        == make_lambda_from_member(b, "r"))
-
-            def get_projection(self, a, b):
-                def mul(ar, br):
-                    out = np.zeros(len(ar), pair_dt)
-                    lhs = ar["data"]
-                    if ta:
-                        lhs = lhs.transpose(0, 2, 1)
-                    out["data"] = np.matmul(lhs, br["data"])
-                    out["key"] = ar[out_att] * (1 << 20) + br["c"]
-                    return out
-                return make_lambda([a, b], mul, "blockMultiply")
-
-        class MulAgg(AggregateComp):
-            def get_key_projection(self, arg):
-                return make_lambda_from_member(arg, "key")
-
-            def get_value_projection(self, arg):
-                return make_lambda(
-                    arg, lambda r: r["data"].reshape(len(r), -1), "flat")
-
-        j = MulJoin()
-        j.set_input(0, ScanSet("db", A.set_name, f"Blk_{A.set_name}"))
-        j.set_input(1, ScanSet("db", B.set_name, f"Blk_{B.set_name}"))
-        agg = MulAgg()
-        agg.set_input(j)
-        _set_counter[0] += 1
-        out_name = f"mm_{_set_counter[0]}"
-        w = WriteSet("db", out_name)
-        w.set_input(agg)
-        r = self.ex.execute(w)
+        a_ds = self.sess.read(A.set_name, f"Blk_{A.set_name}")
+        b_ds = self.sess.read(B.set_name, f"Blk_{B.set_name}")
+        r = (a_ds.join(
+                b_ds,
+                on=lambda a, b: (make_lambda_from_member(a, inner_att)
+                                 == make_lambda_from_member(b, "r")),
+                project=lambda a, b: make_lambda([a, b], mul,
+                                                 "blockMultiply"))
+             .aggregate(key="key", value=_flat_blocks)
+             .collect())
         keys = np.asarray(r["key"])
         vals = np.asarray(r["value"])
         recs = np.zeros(len(keys), _block_dtype(bs))
         recs["r"] = keys >> 20
         recs["c"] = keys & ((1 << 20) - 1)
         recs["data"] = vals.reshape(-1, bs, bs)
+        out_name = self.sess.fresh_set_name("mm")
         self.store.send_data(out_name, recs)
         rows = A.cols if ta else A.rows
         return BlockMatrix(out_name, rows, B.cols, bs)
@@ -160,32 +165,23 @@ class LinAlgSession:
 
     def nearest_neighbor(self, X: BlockMatrix, Am: np.ndarray,
                          xq: np.ndarray, k: int = 1):
-        """argmin_i (x_i - x')^T A (x_i - x') via a TopKComp (paper §8.3)."""
+        """argmin_i (x_i - x')^T A (x_i - x') via top_k (paper §8.3)."""
         dim = X.cols
         row_dt = np.dtype([("idx", np.int64), ("x", np.float64, (dim,))])
         dense = self.fetch(X)
         recs = np.zeros(len(dense), row_dt)
         recs["idx"] = np.arange(len(dense))
         recs["x"] = dense
-        _set_counter[0] += 1
-        sname = f"rows_{_set_counter[0]}"
-        self.store.send_data(sname, recs)
 
-        class NN(TopKComp):
-            def get_score(self, arg):
-                def score(rows):
-                    d = rows["x"] - xq
-                    return -np.einsum("nd,df,nf->n", d, Am, d)
-                return make_lambda(arg, score, "negMahalanobis")
+        def score(rows):
+            d = rows["x"] - xq
+            return -np.einsum("nd,df,nf->n", d, Am, d)
 
-            def get_payload(self, arg):
-                return make_lambda_from_member(arg, "idx")
-
-        t = NN(k)
-        t.set_input(ScanSet("db", sname, "Row"))
-        w = WriteSet("db", f"nn_{sname}")
-        w.set_input(t)
-        r = self.ex.execute(w)
+        r = (self.sess.load("rows", recs, type_name="Row")
+                 .top_k(k, score=lambda a: make_lambda(a, score,
+                                                       "negMahalanobis"),
+                        payload="idx")
+                 .collect())
         return np.asarray(r["payload"]), -np.asarray(r["score"])
 
     # --------------------------------------------------------------- DSL

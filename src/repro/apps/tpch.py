@@ -1,68 +1,88 @@
-"""The paper's big-object analytics (§8.4) over denormalized TPC-H:
+"""The paper's big-object analytics (§8.4) over denormalized TPC-H,
+written against the fluent :class:`~repro.core.session.Session` API:
 
 * customers-per-supplier — for each supplier, the map customer -> parts
-  sold (MultiSelection-equivalent flatten + two-stage aggregation);
+  sold (one two-stage aggregation);
 * top-k Jaccard — customers whose purchased-part set is most similar to a
-  query set (the TopJaccard pattern).
+  query set (the TopJaccard pattern): an aggregation phase materialized via
+  ``write()``, then a ``top_k`` over the per-customer sets.
+
+Set naming is session-scoped (no module-global counters), so concurrent
+sessions in one process cannot collide on store set names.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (AggregateComp, Executor, ScanSet, TopKComp, WriteSet,
-                        make_lambda, make_lambda_from_member)
-from repro.objectmodel import PagedStore
+from repro.core import Executor, Session, make_lambda
 
 __all__ = ["customers_per_supplier", "topk_jaccard", "load_tpch"]
 
-_uid = [0]
+
+def _session_for(store, num_partitions, executor_cls,
+                 session: Optional[Session]) -> Session:
+    """Resolve the session, refusing silently-conflicting arguments: when
+    ``session=`` is given, explicit store/num_partitions/executor_cls must
+    be absent or agree with it (a volcano-baseline measurement must not
+    silently run on a vectorized session)."""
+    if session is None:
+        return Session(store=store, num_partitions=num_partitions or 4,
+                       executor_cls=executor_cls or Executor)
+    if store is not None and session.store is not store:
+        raise ValueError("session= provided but store= is a different store")
+    if (num_partitions is not None
+            and session.executor.P != num_partitions):
+        raise ValueError(
+            f"session= provided with num_partitions={num_partitions}, but "
+            f"the session has {session.executor.P} partitions")
+    if (executor_cls is not None
+            and type(session.executor) is not executor_cls):
+        raise ValueError(
+            f"session= provided with executor_cls={executor_cls.__name__}, "
+            f"but the session runs {type(session.executor).__name__}")
+    return session
 
 
-def _fresh(s):
-    _uid[0] += 1
-    return f"{s}_{_uid[0]}"
+def load_tpch(store, customers: np.ndarray,
+              lineitems: np.ndarray, session: Optional[Session] = None
+              ) -> Tuple[str, str]:
+    sess = _session_for(store, None, None, session)
+    cds = sess.load("customers", customers, type_name="Customer")
+    lds = sess.load("lineitems", lineitems, type_name="Lineitem")
+    return cds.set_name, lds.set_name
 
 
-def load_tpch(store: PagedStore, customers: np.ndarray,
-              lineitems: np.ndarray) -> Tuple[str, str]:
-    cn, ln = _fresh("customers"), _fresh("lineitems")
-    store.send_data(cn, customers)
-    store.send_data(ln, lineitems)
-    return cn, ln
+def _supp_cust_key(rows):
+    return rows["suppkey"] * (1 << 24) + rows["custkey"]
 
 
-def customers_per_supplier(store: PagedStore, lineitems_set: str,
-                           n_parts: int, num_partitions: int = 4,
-                           executor_cls=Executor) -> Dict[int, np.ndarray]:
-    """supplier -> sorted unique (custkey, partkey) pairs sold.
+def _part_presence(n_parts: int):
+    def val(rows):
+        out = np.zeros((len(rows), n_parts), np.int8)
+        out[np.arange(len(rows)), rows["partkey"]] = 1
+        return out
+    return val
 
-    One two-stage aggregation keyed by supplier; values are per-(cust,part)
-    presence vectors encoded sparsely via bit-packing over part ids."""
 
-    class PerSupplier(AggregateComp):
-        def __init__(self):
-            super().__init__(combiner="max")  # presence (set union)
+def customers_per_supplier(store, lineitems_set: str,
+                           n_parts: int, num_partitions: Optional[int] = None,
+                           executor_cls=None,
+                           session: Optional[Session] = None
+                           ) -> Dict[int, Dict[int, np.ndarray]]:
+    """supplier -> sorted unique part ids per customer sold to.
 
-        def get_key_projection(self, arg):
-            def key(rows):
-                return rows["suppkey"] * (1 << 24) + rows["custkey"]
-            return make_lambda(arg, key, "suppCust")
-
-        def get_value_projection(self, arg):
-            def val(rows):
-                out = np.zeros((len(rows), n_parts), np.int8)
-                out[np.arange(len(rows)), rows["partkey"]] = 1
-                return out
-            return make_lambda(arg, val, "partSet")
-
-    agg = PerSupplier()
-    agg.set_input(ScanSet("db", lineitems_set, "Lineitem"))
-    w = WriteSet("db", _fresh("cps"))
-    w.set_input(agg)
-    ex = executor_cls(store, num_partitions=num_partitions)
-    r = ex.execute(w)
+    One two-stage aggregation keyed by (supplier, customer); values are
+    per-part presence vectors combined with max (set union)."""
+    sess = _session_for(store, num_partitions, executor_cls, session)
+    r = (sess.read(lineitems_set, "Lineitem")
+             .aggregate(
+                 key=lambda a: make_lambda(a, _supp_cust_key, "suppCust"),
+                 value=lambda a: make_lambda(a, _part_presence(n_parts),
+                                             "partSet"),
+                 combiner="max")
+             .collect())
     out: Dict[int, Dict[int, np.ndarray]] = {}
     for key, vec in zip(np.asarray(r["key"]), np.asarray(r["value"])):
         supp, cust = int(key) >> 24, int(key) & ((1 << 24) - 1)
@@ -70,60 +90,35 @@ def customers_per_supplier(store: PagedStore, lineitems_set: str,
     return out
 
 
-def topk_jaccard(store: PagedStore, lineitems_set: str, n_parts: int,
+def topk_jaccard(store, lineitems_set: str, n_parts: int,
                  query_parts: np.ndarray, k: int,
-                 num_partitions: int = 4, executor_cls=Executor):
+                 num_partitions: Optional[int] = None, executor_cls=None,
+                 session: Optional[Session] = None):
     """Top-k customers by Jaccard(parts bought, query set). Two phases, as
-    in the paper: build each customer's unique part set (aggregation),
-    then a TopKComp over the per-customer sets."""
+    in the paper: build each customer's part-presence set (aggregation,
+    materialized with ``write()``), then a top_k over the stored sets."""
+    sess = _session_for(store, num_partitions, executor_cls, session)
 
-    class PartSets(AggregateComp):
-        def __init__(self):
-            super().__init__(combiner="max")
+    custsets = sess.fresh_set_name("custsets")
+    (sess.read(lineitems_set, "Lineitem")
+         .aggregate(key="custkey",
+                    value=lambda a: make_lambda(a, _part_presence(n_parts),
+                                                "partSet"),
+                    combiner="max")
+         .write(custsets)
+         .collect())
 
-        def get_key_projection(self, arg):
-            return make_lambda_from_member(arg, "custkey")
+    qvec = np.zeros(n_parts, bool)
+    qvec[query_parts] = True
 
-        def get_value_projection(self, arg):
-            def val(rows):
-                out = np.zeros((len(rows), n_parts), np.int8)
-                out[np.arange(len(rows)), rows["partkey"]] = 1
-                return out
-            return make_lambda(arg, val, "partSet")
+    def jaccard(rows):
+        parts = rows["value"] > 0
+        inter = (parts & qvec).sum(1)
+        union = (parts | qvec).sum(1)
+        return inter / np.maximum(union, 1)
 
-    agg = PartSets()
-    agg.set_input(ScanSet("db", lineitems_set, "Lineitem"))
-    w = WriteSet("db", _fresh("psets"))
-    w.set_input(agg)
-    ex = executor_cls(store, num_partitions=num_partitions)
-    r = ex.execute(w)
-    custs = np.asarray(r["key"])
-    sets = np.asarray(r["value"])  # (n_cust, n_parts) 0/1
-
-    qvec = np.zeros(n_parts, np.int8)
-    qvec[query_parts] = 1
-    set_dt = np.dtype([("custkey", np.int64),
-                       ("parts", np.int8, (n_parts,))])
-    recs = np.zeros(len(custs), set_dt)
-    recs["custkey"] = custs
-    recs["parts"] = sets
-    sname = _fresh("custsets")
-    store.send_data(sname, recs)
-
-    class TopJaccard(TopKComp):
-        def get_score(self, arg):
-            def score(rows):
-                inter = (rows["parts"] & qvec).sum(1)
-                union = (rows["parts"] | qvec).sum(1)
-                return inter / np.maximum(union, 1)
-            return make_lambda(arg, score, "jaccard")
-
-        def get_payload(self, arg):
-            return make_lambda_from_member(arg, "custkey")
-
-    t = TopJaccard(k)
-    t.set_input(ScanSet("db", sname, "CustSet"))
-    w2 = WriteSet("db", _fresh("topk"))
-    w2.set_input(t)
-    r2 = executor_cls(store, num_partitions=num_partitions).execute(w2)
-    return np.asarray(r2["payload"]), np.asarray(r2["score"])
+    r = (sess.read(custsets, "CustSet")
+             .top_k(k, score=lambda a: make_lambda(a, jaccard, "jaccard"),
+                    payload="key")
+             .collect())
+    return np.asarray(r["payload"]), np.asarray(r["score"])

@@ -7,6 +7,7 @@
 * the sharding planner — the "declarative in the large" layer for the
   training/serving side.
 """
+from repro.core.naming import NameScope, default_scope
 from repro.core.lambdas import (LambdaArg, LambdaTerm, constant, make_lambda,
                                 make_lambda_from_member,
                                 make_lambda_from_method,
@@ -15,7 +16,7 @@ from repro.core.lambdas import (LambdaArg, LambdaTerm, constant, make_lambda,
 from repro.core.computations import (AggregateComp, Computation, JoinComp,
                                      MultiSelectionComp, ScanSet,
                                      SelectionComp, TopKComp, WriteSet)
-from repro.core.tcap import TCAPOp, TCAPProgram
+from repro.core.tcap import TCAPOp, TCAPProgram, structural_signature
 from repro.core.compiler import compile_graph
 from repro.core.optimizer import (OptimizerReport, dead_column_elimination,
                                   eliminate_redundant_applies, optimize,
@@ -23,8 +24,12 @@ from repro.core.optimizer import (OptimizerReport, dead_column_elimination,
 from repro.core.physical import PhysicalPlan, estimate_bytes, plan_physical
 from repro.core.executor import ExecStats, Executor, NaiveExecutor
 from repro.core.planner import ShardingPlan, make_plan
+from repro.core.dataset import Dataset
+from repro.core.session import Session
 
 __all__ = [
+    "Dataset", "Session", "NameScope", "default_scope",
+    "structural_signature",
     "LambdaArg", "LambdaTerm", "constant", "make_lambda",
     "make_lambda_from_member", "make_lambda_from_method",
     "make_lambda_from_self", "register_method", "METHOD_REGISTRY",

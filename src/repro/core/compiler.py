@@ -113,10 +113,12 @@ def compile_graph(sink: Computation) -> TCAPProgram:
         s.lst, s.cols = flt, keep
 
     def rec(comp: Computation) -> Tuple[str, Tuple[str, ...]]:
-        if comp.comp_id in memo:
-            return memo[comp.comp_id]
+        # memo by object identity: comp_id streams are per-NameScope, so ids
+        # from different scopes may coincide within one mixed graph.
+        if id(comp) in memo:
+            return memo[id(comp)]
         out = _compile_one(comp)
-        memo[comp.comp_id] = out
+        memo[id(comp)] = out
         return out
 
     def _compile_one(comp: Computation) -> Tuple[str, Tuple[str, ...]]:

@@ -9,26 +9,30 @@ construct the computation, they do not run it.
 from __future__ import annotations
 
 import abc
-import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.lambdas import LambdaArg, LambdaTerm
+from repro.core.naming import NameScope, default_scope
 
 __all__ = ["Computation", "ScanSet", "WriteSet", "SelectionComp",
            "MultiSelectionComp", "JoinComp", "AggregateComp", "TopKComp"]
 
-_comp_ids = itertools.count(1)
-
 
 class Computation(abc.ABC):
-    """Base of the computation graph. ``set_input`` wires the DAG."""
+    """Base of the computation graph. ``set_input`` wires the DAG.
+
+    Naming comes from a :class:`NameScope` — the process-wide default for
+    bare construction, or a Session's own scope when the fluent front-end
+    synthesizes computations (so sessions never share numbering streams).
+    """
 
     arity = 1
 
-    def __init__(self, name: Optional[str] = None):
-        self.comp_id = next(_comp_ids)
+    def __init__(self, name: Optional[str] = None,
+                 scope: Optional[NameScope] = None):
+        self.comp_id = (scope or default_scope()).next_id()
         self.name = name or f"{type(self).__name__}_{self.comp_id}"
         self.inputs: List[Optional["Computation"]] = [None] * self.arity
 
@@ -54,8 +58,9 @@ class ScanSet(Computation):
 
     arity = 0
 
-    def __init__(self, db: str, set_name: str, type_name: str):
-        super().__init__(name=f"Scan_{set_name}")
+    def __init__(self, db: str, set_name: str, type_name: str,
+                 scope: Optional[NameScope] = None):
+        super().__init__(name=f"Scan_{set_name}", scope=scope)
         self.db = db
         self.set_name = set_name
         self.type_name = type_name
@@ -68,8 +73,9 @@ class ScanSet(Computation):
 class WriteSet(Computation):
     """Writes its input set to storage (Writer)."""
 
-    def __init__(self, db: str, set_name: str):
-        super().__init__(name=f"Write_{set_name}")
+    def __init__(self, db: str, set_name: str,
+                 scope: Optional[NameScope] = None):
+        super().__init__(name=f"Write_{set_name}", scope=scope)
         self.db = db
         self.set_name = set_name
 
@@ -77,8 +83,9 @@ class WriteSet(Computation):
 class SelectionComp(Computation):
     """Relational selection + projection over one input set."""
 
-    def __init__(self, name: Optional[str] = None):
-        super().__init__(name)
+    def __init__(self, name: Optional[str] = None,
+                 scope: Optional[NameScope] = None):
+        super().__init__(name, scope)
 
     @abc.abstractmethod
     def get_selection(self, arg: LambdaArg) -> LambdaTerm:
@@ -108,9 +115,10 @@ class JoinComp(Computation):
     conjuncts as hash-join keys and leaves the rest as a residual filter —
     exactly the paper's treatment (§7)."""
 
-    def __init__(self, arity: int = 2, name: Optional[str] = None):
+    def __init__(self, arity: int = 2, name: Optional[str] = None,
+                 scope: Optional[NameScope] = None):
         self.arity = arity
-        super().__init__(name)
+        super().__init__(name, scope)
 
     @abc.abstractmethod
     def get_selection(self, *args: LambdaArg) -> LambdaTerm:
@@ -127,8 +135,9 @@ class AggregateComp(Computation):
     shuffle-by-key-hash → final aggregate)."""
 
     def __init__(self, name: Optional[str] = None,
-                 combiner: str = "sum"):
-        super().__init__(name)
+                 combiner: str = "sum",
+                 scope: Optional[NameScope] = None):
+        super().__init__(name, scope)
         self.combiner = combiner  # sum | max | min (associative, vectorized)
 
     @abc.abstractmethod
@@ -145,8 +154,9 @@ class TopKComp(Computation):
     (score, payload) pair per record; keep the global k best. Implemented as
     pre-top-k per page, merge across pages/workers — an aggregation sink."""
 
-    def __init__(self, k: int, name: Optional[str] = None):
-        super().__init__(name)
+    def __init__(self, k: int, name: Optional[str] = None,
+                 scope: Optional[NameScope] = None):
+        super().__init__(name, scope)
         self.k = k
 
     @abc.abstractmethod

@@ -1,0 +1,338 @@
+"""The fluent, lazy ``Dataset`` handle — "declarative in the large" (§1, §4)
+as a chainable front-end.
+
+A :class:`Dataset` is an immutable description of a query: each chain method
+(``filter`` / ``select`` / ``flat_map`` / ``join`` / ``aggregate`` /
+``top_k`` / ``write``) returns a new handle holding one more plan node.
+Nothing runs until a terminal — ``collect()`` / ``to_numpy()`` — at which
+point the owning :class:`~repro.core.session.Session` synthesizes the
+corresponding :class:`~repro.core.computations.Computation` subclass graph,
+compiles it to TCAP, optimizes (memoized per structural signature), plans
+physically, and executes. ``explain()`` renders the optimized TCAP and the
+physical plan without executing.
+
+The Computation subclass layer stays the stable "capable systems
+programmer" API (the paper's two-level design); this module only
+*synthesizes* those classes — a run of ``filter`` calls followed by an
+optional ``select`` fuses into a single SelectionComp, exactly the shape a
+hand-written subclass would take, so both front-ends compile to identical
+TCAP (verified by ``tests/test_fluent_api.py``).
+
+Lambda specifications accepted by the chain methods:
+
+* a **callable** receiving one :class:`LambdaArg` per input and returning a
+  :class:`LambdaTerm` — the same construction-function contract as the
+  subclass layer (``lambda e: e.salary > 60_000``, or using
+  ``make_lambda`` / ``make_lambda_from_method`` for opaque/registered
+  code). Note ``arg.<attr>`` sugar is shadowed by the few real LambdaArg
+  attributes (``name``, ``slot``, ``type_name``, ``term``); use
+  ``make_lambda_from_member`` for columns with those names.
+* a **string** — attribute access on the record (``"salary"``);
+* ``None`` — identity (``make_lambda_from_self``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.computations import (AggregateComp, Computation, JoinComp,
+                                     MultiSelectionComp, ScanSet,
+                                     SelectionComp, TopKComp, WriteSet)
+from repro.core.lambdas import (LambdaArg, LambdaTerm, constant,
+                                make_lambda_from_member,
+                                make_lambda_from_self)
+
+__all__ = ["Dataset"]
+
+LambdaSpec = Union[str, Callable[..., LambdaTerm], None]
+
+
+def _as_term(spec: LambdaSpec, arg: LambdaArg) -> LambdaTerm:
+    if spec is None:
+        return make_lambda_from_self(arg)
+    if isinstance(spec, str):
+        return make_lambda_from_member(arg, spec)
+    term = spec(arg)
+    if not isinstance(term, LambdaTerm):
+        raise TypeError(f"lambda construction function returned {term!r}, "
+                        "expected a LambdaTerm")
+    return term
+
+
+# --------------------------------------------------------------- plan nodes
+@dataclasses.dataclass(frozen=True)
+class _Scan:
+    set_name: str
+    type_name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class _Filter:
+    parent: Any
+    pred: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class _Select:
+    parent: Any
+    proj: LambdaSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class _FlatMap:
+    parent: Any
+    proj: LambdaSpec
+    pred: Optional[Callable]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Join:
+    left: Any
+    right: Any
+    on: Callable
+    project: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class _Aggregate:
+    parent: Any
+    key: LambdaSpec
+    value: LambdaSpec
+    combiner: str
+
+
+@dataclasses.dataclass(frozen=True)
+class _TopK:
+    parent: Any
+    k: int
+    score: LambdaSpec
+    payload: LambdaSpec
+
+
+class Dataset:
+    """A lazy handle on a (chain of) relational transformations.
+
+    Obtained from :meth:`Session.read` / :meth:`Session.load`; immutable —
+    every chain method returns a new handle sharing the session.
+    """
+
+    def __init__(self, session, node, write_name: Optional[str] = None):
+        self._session = session
+        self._node = node
+        self._write_name = write_name
+        # memoized per-handle so repeated collect() recompiles nothing and
+        # native-lambda identities stay stable (the plan-cache key relies
+        # on this).
+        self._sink: Optional[WriteSet] = None
+        self._out_name: Optional[str] = None
+        self._prog = None  # compiled TCAP, set by Session._compile
+        self._sig = None   # its structural signature (plan-cache key)
+        self._materialized = False  # write() target persisted already
+
+    # ----------------------------------------------------------- chaining
+    def _derive(self, node) -> "Dataset":
+        if self._write_name is not None:
+            raise ValueError(
+                f"write({self._write_name!r}) is terminal — chain before "
+                "write(), or collect() and session.read() the "
+                "materialized set")
+        return Dataset(self._session, node)
+
+    def filter(self, pred: Callable) -> "Dataset":
+        """Keep records where ``pred(arg)`` evaluates true."""
+        if not callable(pred):
+            raise TypeError("filter() takes a lambda construction function")
+        return self._derive(_Filter(self._node, pred))
+
+    def select(self, proj: LambdaSpec) -> "Dataset":
+        """Project each record through ``proj`` (a.k.a. :meth:`map`)."""
+        return self._derive(_Select(self._node, proj))
+
+    map = select
+
+    def flat_map(self, proj: LambdaSpec,
+                 pred: Optional[Callable] = None) -> "Dataset":
+        """Set-valued projection: each record maps to zero or more outputs
+        (MultiSelectionComp — the projection returns per-row sequences)."""
+        return self._derive(_FlatMap(self._node, proj, pred))
+
+    def join(self, other: "Dataset", on: Callable,
+             project: Callable) -> "Dataset":
+        """Equi/theta join. ``on(a, b)`` builds the predicate (equality
+        conjuncts become hash-join keys, the rest a residual filter — §7);
+        ``project(a, b)`` builds the output record."""
+        if other._session is not self._session:
+            raise ValueError("cannot join datasets from different sessions")
+        if other._write_name is not None:
+            raise ValueError(
+                "cannot join against a write()-terminated dataset — "
+                "collect() it and session.read() the materialized set")
+        return self._derive(_Join(self._node, other._node, on, project))
+
+    def aggregate(self, key: LambdaSpec, value: LambdaSpec,
+                  combiner: str = "sum") -> "Dataset":
+        """Two-stage distributed aggregation: per-record (key, value)
+        extraction + an associative combiner (``sum``/``max``/``min``)."""
+        return self._derive(_Aggregate(self._node, key, value, combiner))
+
+    def top_k(self, k: int, score: LambdaSpec,
+              payload: LambdaSpec) -> "Dataset":
+        """Global top-k by score (the paper's TopJaccard pattern)."""
+        return self._derive(_TopK(self._node, int(k), score, payload))
+
+    def write(self, set_name: str) -> "Dataset":
+        """Name the output set; ``collect()`` materializes the result there
+        (structured record array) if the set does not already exist."""
+        return Dataset(self._session, self._node, write_name=set_name)
+
+    # ---------------------------------------------------------- terminals
+    def collect(self) -> Dict[str, np.ndarray]:
+        """Compile → optimize (plan-cached) → plan → execute; returns the
+        output vector list as named numpy columns."""
+        return self._session._run(self)
+
+    def to_numpy(self) -> np.ndarray:
+        result = self.collect()
+        if len(result) != 1:
+            raise ValueError(
+                f"to_numpy() needs a single-column result, got "
+                f"{sorted(result)}; use collect()")
+        return next(iter(result.values()))
+
+    def explain(self) -> str:
+        """Render the optimized TCAP program + physical plan (no execution)."""
+        return self._session._explain(self)
+
+    @property
+    def output_set(self) -> Optional[str]:
+        """The output set name (explicit via write(), else assigned at first
+        compile)."""
+        return self._write_name or self._out_name
+
+    @property
+    def set_name(self) -> Optional[str]:
+        """For a plain scan handle, the stored set it reads; otherwise the
+        output set name (if any)."""
+        if isinstance(self._node, _Scan):
+            return self._node.set_name
+        return self.output_set
+
+    # ------------------------------------------------------------- build
+    def _build_sink(self) -> WriteSet:
+        if self._sink is None:
+            sess = self._session
+            if self._write_name is not None:
+                self._out_name = self._write_name
+            else:
+                self._out_name = sess.fresh_set_name("out")
+            comp = _synthesize(sess, self._node)
+            sink = WriteSet(sess.db, self._out_name, scope=sess.scope)
+            sink.set_input(comp)
+            self._sink = sink
+        return self._sink
+
+
+# ----------------------------------------------------- graph synthesis
+def _synthesize(sess, node) -> Computation:
+    scope = sess.scope
+
+    if isinstance(node, _Scan):
+        return ScanSet(sess.db, node.set_name, node.type_name, scope=scope)
+
+    if isinstance(node, (_Filter, _Select)):
+        # fuse the maximal filter* [select] run into ONE SelectionComp —
+        # the same shape a hand-written subclass takes.
+        proj: LambdaSpec = None
+        cur = node
+        if isinstance(cur, _Select):
+            proj = cur.proj
+            cur = cur.parent
+        preds = []
+        while isinstance(cur, _Filter):
+            preds.append(cur.pred)
+            cur = cur.parent
+        preds.reverse()
+        upstream = _synthesize(sess, cur)
+
+        class _FluentSelection(SelectionComp):
+            def get_selection(self, arg):
+                if not preds:
+                    return constant(True)
+                term = preds[0](arg)
+                for p in preds[1:]:
+                    term = term & p(arg)
+                return term
+
+            def get_projection(self, arg):
+                return _as_term(proj, arg)
+
+        comp = _FluentSelection(name=scope.fresh("Select"), scope=scope)
+        comp.set_input(upstream)
+        return comp
+
+    if isinstance(node, _FlatMap):
+        upstream = _synthesize(sess, node.parent)
+        pred, proj = node.pred, node.proj
+
+        class _FluentFlatMap(MultiSelectionComp):
+            def get_selection(self, arg):
+                return pred(arg) if pred is not None else constant(True)
+
+            def get_projection(self, arg):
+                return _as_term(proj, arg)
+
+        comp = _FluentFlatMap(name=scope.fresh("FlatMap"), scope=scope)
+        comp.set_input(upstream)
+        return comp
+
+    if isinstance(node, _Join):
+        left = _synthesize(sess, node.left)
+        right = _synthesize(sess, node.right)
+        on, project = node.on, node.project
+
+        class _FluentJoin(JoinComp):
+            def get_selection(self, *args):
+                return on(*args)
+
+            def get_projection(self, *args):
+                return project(*args)
+
+        comp = _FluentJoin(arity=2, name=scope.fresh("Join"), scope=scope)
+        comp.set_input(0, left)
+        comp.set_input(1, right)
+        return comp
+
+    if isinstance(node, _Aggregate):
+        upstream = _synthesize(sess, node.parent)
+        key, value = node.key, node.value
+
+        class _FluentAggregate(AggregateComp):
+            def get_key_projection(self, arg):
+                return _as_term(key, arg)
+
+            def get_value_projection(self, arg):
+                return _as_term(value, arg)
+
+        comp = _FluentAggregate(name=scope.fresh("Aggregate"), scope=scope,
+                                combiner=node.combiner)
+        comp.set_input(upstream)
+        return comp
+
+    if isinstance(node, _TopK):
+        upstream = _synthesize(sess, node.parent)
+        score, payload = node.score, node.payload
+
+        class _FluentTopK(TopKComp):
+            def get_score(self, arg):
+                return _as_term(score, arg)
+
+            def get_payload(self, arg):
+                return _as_term(payload, arg)
+
+        comp = _FluentTopK(node.k, name=scope.fresh("TopK"), scope=scope)
+        comp.set_input(upstream)
+        return comp
+
+    raise TypeError(f"unknown plan node {node!r}")

@@ -154,12 +154,17 @@ class Executor:
 
     def __init__(self, store: PagedStore, num_partitions: int = 4,
                  vector_rows: int = 8192, do_optimize: bool = True,
-                 broadcast_threshold_bytes: int = 2 << 30):
+                 broadcast_threshold_bytes: int = 2 << 30,
+                 write_outputs: bool = True):
         self.store = store
         self.P = num_partitions
         self.vector_rows = vector_rows
         self.do_optimize = do_optimize
         self.broadcast_threshold = broadcast_threshold_bytes
+        # when False, OUTPUT never writes back to the store — the caller
+        # (the Session facade) materializes results itself so single- and
+        # multi-column outputs get the same structured-record treatment.
+        self.write_outputs = write_outputs
         self.stats = ExecStats()
 
     # ------------------------------------------------------------ public
@@ -367,7 +372,7 @@ class Executor:
         n = len(next(iter(out.values()))) if out else 0
         self.stats.rows_output = n
         set_name = op.info["set"]
-        if len(out) == 1:
+        if len(out) == 1 and self.write_outputs:
             rec = next(iter(out.values()))
             if set_name not in self.store.sets and rec.dtype != object:
                 self.store.send_data(set_name, rec)

@@ -1,0 +1,214 @@
+"""The ``Session`` facade — one declarative front-end over the whole
+compile → optimize → plan → execute pipeline (paper §1's "declarative in
+the large" claim, made literal).
+
+A Session owns:
+
+* a :class:`~repro.objectmodel.store.PagedStore` (or adopts a shared one),
+* a :class:`~repro.core.naming.NameScope` — all set and computation names
+  synthesized by this session come from its own numbering stream, so two
+  sessions in one process never collide (set names are additionally probed
+  against the store, which covers sessions *sharing* a store),
+* the executor configuration (partition count, vector width, broadcast
+  threshold, vectorized vs volcano),
+* a **plan cache**: optimized TCAP programs memoized by the unoptimized
+  program's structural signature (:func:`~repro.core.tcap
+  .structural_signature`), so a repeated query skips the rule-engine
+  fixpoint entirely. Cache entries pin the unoptimized program too, keeping
+  native-lambda objects alive so id-based keys can never be reused by a
+  different function.
+
+Usage::
+
+    sess = Session(num_partitions=4)
+    emps = sess.load("employees", records, type_name="Employee")
+    payroll = (emps.filter(lambda e: e.salary > 60_000)
+                   .aggregate(key="dept", value="salary"))
+    print(payroll.explain())
+    result = payroll.collect()
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compiler import compile_graph
+from repro.core.dataset import Dataset, _Scan
+from repro.core.executor import Executor
+from repro.core.naming import NameScope
+from repro.core.optimizer import OptimizerReport, optimize
+from repro.core.physical import plan_physical
+from repro.core.tcap import TCAPProgram, structural_signature
+from repro.objectmodel.store import PagedStore
+
+__all__ = ["Session"]
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    # the unoptimized program is pinned deliberately: the signature keys on
+    # native-lambda id(), which stays unique only while the object lives.
+    unoptimized: TCAPProgram
+    optimized: TCAPProgram
+    report: OptimizerReport
+
+
+class Session:
+    """Owns storage, naming, executor configuration, and the plan cache."""
+
+    def __init__(self, store: Optional[PagedStore] = None, db: str = "db",
+                 num_partitions: int = 4, vector_rows: int = 8192,
+                 do_optimize: bool = True,
+                 broadcast_threshold_bytes: int = 2 << 30,
+                 executor_cls=Executor):
+        self.store = store if store is not None else PagedStore()
+        self.db = db
+        self.scope = NameScope()
+        self.do_optimize = do_optimize
+        # the session drives optimization itself (through the plan cache),
+        # so its executor always runs programs as given.
+        self.executor = executor_cls(
+            self.store, num_partitions=num_partitions,
+            vector_rows=vector_rows, do_optimize=False,
+            broadcast_threshold_bytes=broadcast_threshold_bytes,
+            write_outputs=False)
+        self._plan_cache: Dict[Tuple, _CacheEntry] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.last_stats = None
+        self.last_report: Optional[OptimizerReport] = None
+
+    # ------------------------------------------------------------ naming
+    def fresh_set_name(self, prefix: str) -> str:
+        """A set name absent from the store and not yet handed out to
+        anyone — reservations live on the (possibly shared) store, so two
+        sessions sharing one store can never claim the same name even
+        before either writes."""
+        while True:
+            name = self.scope.fresh(prefix)
+            if (name not in self.store.sets
+                    and name not in self.store.reserved_names):
+                self.store.reserved_names.add(name)
+                return name
+
+    # -------------------------------------------------------------- I/O
+    def read(self, set_name: str, type_name: Optional[str] = None) -> Dataset:
+        """A Dataset over an existing stored set."""
+        return Dataset(self, _Scan(set_name, type_name or set_name))
+
+    def load(self, name: str, records: np.ndarray,
+             type_name: Optional[str] = None) -> Dataset:
+        """Store packed records under a fresh session-scoped set name and
+        return a Dataset over them (``sendData`` + scan)."""
+        sname = self.fresh_set_name(name)
+        self.store.send_data(sname, records)
+        return self.read(sname, type_name or name)
+
+    # --------------------------------------------------------- pipeline
+    def _compile(self, ds: Dataset) -> TCAPProgram:
+        # memoized per handle: recompiling would re-invoke the user's
+        # lambda-construction functions, and inline native lambdas would
+        # get fresh identities — defeating the plan cache.
+        if ds._prog is None:
+            ds._prog = compile_graph(ds._build_sink())
+            ds._sig = structural_signature(ds._prog, strict=True)
+        return ds._prog
+
+    def _plan(self, ds: Dataset) -> Tuple[TCAPProgram,
+                                          Optional[OptimizerReport]]:
+        prog = self._compile(ds)
+        if not self.do_optimize:
+            return prog, None
+        key = ds._sig
+        entry = self._plan_cache.get(key)
+        if entry is not None:
+            self.cache_hits += 1
+            return (self._rebind_output(entry.optimized, ds.output_set),
+                    entry.report)
+        opt, rep = optimize(prog)
+        self.cache_misses += 1
+        self._plan_cache[key] = _CacheEntry(prog, opt, rep)
+        return opt, rep
+
+    @staticmethod
+    def _rebind_output(prog: TCAPProgram, out_set: str) -> TCAPProgram:
+        """The OUTPUT set name is excluded from the cache key (it's a sink
+        label, not query shape) — point a reused program at this handle's
+        output set."""
+        ops = list(prog.ops)
+        for i, op in enumerate(ops):
+            if op.op == "OUTPUT" and op.info.get("set") != out_set:
+                ops[i] = dataclasses.replace(
+                    op, info={**op.info, "set": out_set})
+                return TCAPProgram(ops)
+        return prog
+
+    def _run(self, ds: Dataset) -> Dict[str, np.ndarray]:
+        write_name = ds._write_name
+        if (write_name is not None and not ds._materialized
+                and write_name in self.store.sets):
+            raise ValueError(
+                f"write({write_name!r}): set already exists in the store — "
+                "pick a fresh name (Session.fresh_set_name) to avoid "
+                "silently reading stale or merged data")
+        prog, rep = self._plan(ds)
+        result = self.executor.execute_program(prog)
+        self.last_stats = self.executor.stats
+        self.last_report = rep
+        if write_name is not None and not ds._materialized:
+            self._materialize(write_name, result)
+            ds._materialized = True
+        return result
+
+    def _materialize(self, name: str, result: Dict[str, np.ndarray]) -> None:
+        """Persist a collect() result as a structured-record set — the only
+        write-back path for session-run queries (the session's executor has
+        write_outputs=False), so single- and multi-column results get the
+        same named-field treatment."""
+        arrays = {c: np.asarray(a) for c, a in result.items()}
+        bad = [c for c, a in arrays.items() if a.dtype == object]
+        if bad:
+            raise ValueError(
+                f"write({name!r}): cannot materialize object-dtype "
+                f"column(s) {bad} as packed records")
+        if not arrays:
+            raise ValueError(f"write({name!r}): query produced no columns")
+        n = len(next(iter(arrays.values())))
+        dtype = np.dtype([(c, a.dtype, a.shape[1:])
+                          for c, a in arrays.items()])
+        recs = np.zeros(n, dtype)
+        for c, a in arrays.items():
+            recs[c] = a
+        self.store.send_data(name, recs)
+
+    def _explain(self, ds: Dataset) -> str:
+        prog, rep = self._plan(ds)
+        plan = plan_physical(prog, self.store,
+                             self.executor.broadcast_threshold)
+        lines = [f"== optimized TCAP ({len(prog)} ops) =="]
+        if rep is not None:
+            lines.append(
+                f"-- optimizer: {rep.iterations} iterations, CSE removed "
+                f"{rep.cse_removed}, filters pushed {rep.filters_pushed}, "
+                f"dead cols {rep.dead_cols_removed}, dead ops "
+                f"{rep.dead_ops_removed}")
+        lines.append(prog.to_text())
+        lines.append(f"== physical plan: {len(plan.pipelines)} pipelines, "
+                     f"{self.executor.P} partitions ==")
+        for i, pipe in enumerate(plan.pipelines):
+            stages = " -> ".join(op.op for op in pipe)
+            lines.append(f"  pipeline {i}: {stages}")
+            for op in pipe:
+                if op.op == "JOIN":
+                    algo = plan.join_algo.get(id(op), "hash_partition")
+                    est = plan.estimates.get(op.in_list2, 0.0)
+                    lines.append(f"    join: {algo} "
+                                 f"(build side ~{est:,.0f} bytes)")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------ stats
+    def plan_cache_info(self) -> Dict[str, int]:
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "entries": len(self._plan_cache)}

@@ -12,7 +12,7 @@ import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-__all__ = ["TCAPOp", "TCAPProgram"]
+__all__ = ["TCAPOp", "TCAPProgram", "structural_signature"]
 
 
 @dataclass
@@ -109,3 +109,58 @@ class TCAPProgram:
             if op.out in seen:
                 raise ValueError(f"duplicate vector list {op.out}")
             seen[op.out] = op.out_cols
+
+
+def structural_signature(prog: TCAPProgram, strict: bool = True) -> Tuple:
+    """A name-independent structural key for a TCAP program.
+
+    Vector-list and column names are canonicalized to first-appearance
+    ordinals, and the ``comp``/``stage`` fields (which embed per-compile
+    counters) are dropped, so two compilations of the same logical query
+    produce equal signatures regardless of naming streams.
+
+    ``strict=True`` (the plan-cache key) distinguishes native lambdas by
+    function identity and keeps SCAN set names — a cached optimized
+    program is only reused for a query that scans the same sets and runs
+    the identical native code. ``strict=False`` (the API-equivalence view)
+    collapses native lambdas to their declared name, so a fluent chain and
+    a hand-written Computation graph of the same query compare equal
+    op-for-op. Both modes ignore the OUTPUT set name: it is a sink label,
+    not part of the query shape (the session rebinds it on cache reuse).
+    """
+    list_ord: Dict[str, int] = {}
+    col_ord: Dict[str, int] = {}
+
+    def lid(name: str) -> int:
+        return list_ord.get(name, -1)
+
+    def cid(col: str) -> int:
+        if col not in col_ord:
+            col_ord[col] = len(col_ord)
+        return col_ord[col]
+
+    sig = []
+    for i, op in enumerate(prog.ops):
+        info = []
+        for k in sorted(op.info):
+            v = op.info[k]
+            if k == "fn":
+                info.append((k, id(v) if strict else "<fn>"))
+            elif op.op == "OUTPUT" and k == "set":
+                continue
+            elif k == "onType" and v in col_ord:
+                # intermediate record types are named after their producing
+                # computation (= its output column, already canonicalized);
+                # per-compile name counters must not leak into the key.
+                info.append((k, ("col", col_ord[v])))
+            else:
+                info.append((k, str(v)))
+        sig.append((op.op,
+                    lid(op.in_list), tuple(cid(c) for c in op.apply_cols),
+                    tuple(cid(c) for c in op.copy_cols),
+                    lid(op.in_list2), tuple(cid(c) for c in op.apply_cols2),
+                    tuple(cid(c) for c in op.copy_cols2),
+                    tuple(cid(c) for c in op.out_cols),
+                    tuple(info)))
+        list_ord[op.out] = i
+    return tuple(sig)

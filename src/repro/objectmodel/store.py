@@ -69,6 +69,10 @@ class PagedStore:
         self.root = root
         self.page_size = page_size
         self.sets: Dict[str, PagedSet] = {}
+        # names handed out (e.g. by Session.fresh_set_name) but not yet
+        # backed by pages — shared here so sessions sharing this store
+        # cannot both claim the same name before either writes.
+        self.reserved_names: set = set()
 
     def create_set(self, name: str, dtype: np.dtype,
                    page_size: Optional[int] = None) -> PagedSet:

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; CI installs it")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Executor, ScanSet, SelectionComp, WriteSet,

@@ -1,0 +1,77 @@
+"""Distributed worker runtime vs the local simulation.
+
+One shuffle-heavy query (hash-partition join + aggregation) measured on
+the local simulated executor and on ``backend="workers"`` for
+N ∈ {1, 2, 4}: wall-clock per query, plus shuffle traffic — the local
+number is the simulator's *estimate* of bytes that would move, the
+workers number is *real serialized page traffic* through the exchange
+layer (shuffles, broadcasts, AGG partials, and the TOPK/OUTPUT gathers).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Session, make_lambda
+
+EMP_DT = np.dtype([("dept", np.int64), ("salary", np.int64)])
+DEP_DT = np.dtype([("deptkey", np.int64), ("rank", np.int64)])
+
+N_DEPTS = 64
+
+
+def _data(n: int, seed: int = 11):
+    rng = np.random.default_rng(seed)
+    emps = np.zeros(n, EMP_DT)
+    emps["dept"] = rng.integers(0, N_DEPTS, n)
+    emps["salary"] = rng.integers(30_000, 120_000, n)
+    deps = np.zeros(N_DEPTS, DEP_DT)
+    deps["deptkey"] = np.arange(N_DEPTS)
+    deps["rank"] = np.arange(N_DEPTS) + 1
+    return emps, deps
+
+
+def _query(sess: Session, emps: np.ndarray, deps: np.ndarray):
+    e = sess.load("emps", emps, type_name="Emp")
+    d = sess.load("deps", deps, type_name="Dep")
+    return (e.join(d, on=lambda r, s: r.dept == s.deptkey,
+                   project=lambda r, s: make_lambda(
+                       [r, s], lambda er, dr:
+                       er["salary"] * dr["rank"], "weighted"))
+             .aggregate(key=None, value=None))
+
+
+def _time_per_call(fn, reps: int) -> float:
+    fn()  # warmup (plan cache, lazy imports)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n: int = 100_000, reps: int = 5, worker_counts=(1, 2, 4)):
+    emps, deps = _data(n)
+    rows = []
+    # broadcast_threshold_bytes=0 forces the hash-partition path so every
+    # backend pays the full two-sided shuffle being measured.
+    sess = Session(num_partitions=4, broadcast_threshold_bytes=0)
+    ds = _query(sess, emps, deps)
+    t_local = _time_per_call(ds.collect, reps)
+    rows.append((f"dist_local_sim_p4_n{n}", t_local * 1e6,
+                 f"est_shuffle_bytes={sess.executor.stats.shuffle_bytes}"))
+    for N in worker_counts:
+        sess = Session(backend="workers", num_workers=N,
+                       broadcast_threshold_bytes=0)
+        ds = _query(sess, emps, deps)
+        t = _time_per_call(ds.collect, reps)
+        st = sess.executor.stats
+        rows.append((f"dist_workers_x{N}_n{n}", t * 1e6,
+                     f"real_shuffle_bytes={st.shuffle_bytes} "
+                     f"vs_local={t / t_local:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -70,11 +70,11 @@ def run(n_points=20_000, dim=32, n_docs=400, vocab=500):
 def _volcano_kmeans_iter(x, k):
     """One k-means iteration through the volcano executor."""
     import repro.apps.ml as ml
-    from repro.core import ScanSet, WriteSet
+    from repro.core import ScanSet, Session, WriteSet
     from repro.core.executor import NaiveExecutor
     from repro.objectmodel import PagedStore
     store = PagedStore()
-    sname = ml._points_to_store(store, x)
+    sname = ml._points_to_store(store, x, Session(store=store))
     C = x[:k].copy()
     km = ml.KMeans(k, iters=1)
     # build the same AggregateComp the engine uses

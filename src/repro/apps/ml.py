@@ -2,6 +2,11 @@
 Computation API: k-means (Appendix A's AggregateComp, verbatim structure),
 GMM-EM (a single AggregateComp carrying the model, as in the paper), and a
 word-based non-collapsed LDA Gibbs sampler over (doc, word, count) triples.
+
+Set naming is session-scoped (:class:`~repro.core.naming.NameScope` via
+:meth:`Session.fresh_set_name`) — the module-global ``_uid`` counter is
+gone, so concurrent tools in one process can never collide on store set
+names (the same port tpch/linalg got in PR 1).
 """
 from __future__ import annotations
 
@@ -10,41 +15,55 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (AggregateComp, Executor, ScanSet, WriteSet,
+from repro.core import (AggregateComp, Executor, ScanSet, Session, WriteSet,
                         make_lambda, make_lambda_from_member)
 from repro.objectmodel import PagedStore
 
 __all__ = ["KMeans", "GMM", "LDAGibbs"]
 
-_uid = [0]
 
-
-def _fresh(name: str) -> str:
-    _uid[0] += 1
-    return f"{name}_{_uid[0]}"
-
-
-def _points_to_store(store: PagedStore, x: np.ndarray) -> str:
+def _points_to_store(store: PagedStore, x: np.ndarray,
+                     session: Session) -> str:
     dt = np.dtype([("x", np.float64, (x.shape[1],))])
     rec = np.zeros(len(x), dt)
     rec["x"] = x
-    name = _fresh("pts")
+    name = session.fresh_set_name("pts")
     store.send_data(name, rec)
     return name
 
 
+def _tool_session(num_partitions: int,
+                  session: Optional[Session]) -> Session:
+    """Each tool run gets a session-scoped naming domain (shared when the
+    caller passes its own session).
+
+    Note ``session=`` contributes its *store and naming scope only*: the
+    tools drive their own :class:`Executor` (they control ``do_optimize``
+    and the partition count per iteration), so the session's backend and
+    executor configuration are not consulted."""
+    if session is not None:
+        return session
+    return Session(num_partitions=num_partitions)
+
+
 class KMeans:
-    """Appendix-A k-means: key = closest centroid, value = (sum, count)."""
+    """Appendix-A k-means: key = closest centroid, value = (sum, count).
+
+    ``session=`` shares a store and naming scope only — execution always
+    uses the tool's own local :class:`Executor` (see ``_tool_session``)."""
 
     def __init__(self, k: int, iters: int = 10, num_partitions: int = 4,
-                 do_optimize: bool = True):
+                 do_optimize: bool = True,
+                 session: Optional[Session] = None):
         self.k, self.iters = k, iters
         self.P = num_partitions
         self.do_optimize = do_optimize
+        self.session = session
 
     def fit(self, x: np.ndarray) -> np.ndarray:
-        store = PagedStore()
-        sname = _points_to_store(store, x)
+        sess = _tool_session(self.P, self.session)
+        store = sess.store
+        sname = _points_to_store(store, x, session=sess)
         ex = Executor(store, num_partitions=self.P,
                       do_optimize=self.do_optimize)
         dim = x.shape[1]
@@ -75,9 +94,11 @@ class KMeans:
                             [xx, np.ones((len(xx), 1))], axis=1)
                     return make_lambda(arg, from_me, "fromMe")
 
-            agg = GetNewCentroids()
-            agg.set_input(ScanSet("db", sname, "DataPoint"))
-            w = WriteSet("db", _fresh("cent"))
+            agg = GetNewCentroids(scope=sess.scope)
+            agg.set_input(ScanSet("db", sname, "DataPoint",
+                                  scope=sess.scope))
+            w = WriteSet("db", sess.fresh_set_name("cent"),
+                         scope=sess.scope)
             w.set_input(agg)
             r = ex.execute(w)
             for key, val in zip(np.asarray(r["key"]),
@@ -90,16 +111,23 @@ class KMeans:
 class GMM:
     """EM for a Gaussian mixture: one AggregateComp per iteration holding
     the current model, soft-assigning inside the value projection (log-space
-    responsibilities, the paper's underflow trick)."""
+    responsibilities, the paper's underflow trick). Diagonal covariance
+    only.
+
+    ``session=`` shares a store and naming scope only — execution always
+    uses the tool's own local :class:`Executor` (see ``_tool_session``)."""
 
     def __init__(self, k: int, iters: int = 10, num_partitions: int = 4,
-                 do_optimize: bool = True, diag: bool = True):
+                 do_optimize: bool = True,
+                 session: Optional[Session] = None):
         self.k, self.iters, self.P = k, iters, num_partitions
         self.do_optimize = do_optimize
+        self.session = session
 
     def fit(self, x: np.ndarray):
-        store = PagedStore()
-        sname = _points_to_store(store, x)
+        sess = _tool_session(self.P, self.session)
+        store = sess.store
+        sname = _points_to_store(store, x, session=sess)
         ex = Executor(store, num_partitions=self.P,
                       do_optimize=self.do_optimize)
         n, d = x.shape
@@ -137,9 +165,11 @@ class GMM:
                         return np.tile(out, (len(xx), 1)) / len(xx)
                     return make_lambda(arg, stats, "suffStats")
 
-            agg = EStep()
-            agg.set_input(ScanSet("db", sname, "DataPoint"))
-            w = WriteSet("db", _fresh("gmm"))
+            agg = EStep(scope=sess.scope)
+            agg.set_input(ScanSet("db", sname, "DataPoint",
+                                  scope=sess.scope))
+            w = WriteSet("db", sess.fresh_set_name("gmm"),
+                         scope=sess.scope)
             w.set_input(agg)
             r = ex.execute(w)
             flat = np.asarray(r["value"])[0].reshape(k, 1 + 2 * d)
@@ -155,20 +185,26 @@ class LDAGibbs:
     """Word-based, non-collapsed LDA Gibbs (paper §8.5.1): data are
     (doc, word, count) triples; each iteration joins triples with the
     per-doc topic distribution, samples topic assignments multinomially,
-    and aggregates word-topic and doc-topic counts."""
+    and aggregates word-topic and doc-topic counts.
+
+    ``session=`` shares a store and naming scope only — execution always
+    uses the tool's own local :class:`Executor` (see ``_tool_session``)."""
 
     def __init__(self, n_topics: int, vocab: int, iters: int = 5,
                  num_partitions: int = 4, do_optimize: bool = True,
-                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0):
+                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
+                 session: Optional[Session] = None):
         self.T, self.V, self.iters = n_topics, vocab, iters
         self.P = num_partitions
         self.do_optimize = do_optimize
         self.alpha, self.beta = alpha, beta
         self.rng = np.random.default_rng(seed)
+        self.session = session
 
     def fit(self, triples: np.ndarray, n_docs: int):
-        store = PagedStore()
-        name = _fresh("triples")
+        sess = _tool_session(self.P, self.session)
+        store = sess.store
+        name = sess.fresh_set_name("triples")
         store.send_data(name, triples)
         ex = Executor(store, num_partitions=self.P,
                       do_optimize=self.do_optimize)
@@ -203,9 +239,10 @@ class LDAGibbs:
                         return out
                     return make_lambda(arg, sample, "sampleTopics")
 
-            agg = SampleAgg()
-            agg.set_input(ScanSet("db", name, "Triple"))
-            w = WriteSet("db", _fresh("lda"))
+            agg = SampleAgg(scope=sess.scope)
+            agg.set_input(ScanSet("db", name, "Triple", scope=sess.scope))
+            w = WriteSet("db", sess.fresh_set_name("lda"),
+                         scope=sess.scope)
             w.set_input(agg)
             r = ex.execute(w)
             keys = np.asarray(r["key"]) // 2
@@ -233,9 +270,10 @@ class LDAGibbs:
                         return out
                     return make_lambda(arg, sample, "sampleTopics")
 
-            agg2 = WordAgg()
-            agg2.set_input(ScanSet("db", name, "Triple"))
-            w2 = WriteSet("db", _fresh("ldaw"))
+            agg2 = WordAgg(scope=sess.scope)
+            agg2.set_input(ScanSet("db", name, "Triple", scope=sess.scope))
+            w2 = WriteSet("db", sess.fresh_set_name("ldaw"),
+                          scope=sess.scope)
             w2.set_input(agg2)
             r2 = ex.execute(w2)
             wt = np.zeros((V, T))

@@ -25,8 +25,9 @@ Lambda specifications accepted by the chain methods:
   subclass layer (``lambda e: e.salary > 60_000``, or using
   ``make_lambda`` / ``make_lambda_from_method`` for opaque/registered
   code). Note ``arg.<attr>`` sugar is shadowed by the few real LambdaArg
-  attributes (``name``, ``slot``, ``type_name``, ``term``); use
-  ``make_lambda_from_member`` for columns with those names.
+  attributes (``name``, ``slot``, ``type_name``, ``term``, ``col``); use
+  ``arg.col("name")`` (or ``make_lambda_from_member``) for columns with
+  those names.
 * a **string** — attribute access on the record (``"salary"``);
 * ``None`` — identity (``make_lambda_from_self``).
 """

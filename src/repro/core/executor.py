@@ -10,6 +10,13 @@ distributed semantics are simulated with P logical partitions on one host:
 * **TOPK** — per-partition top-k, then a global merge (the paper's
   TopJaccard pattern).
 
+The per-partition operator kernels live in :mod:`repro.core.relops` and are
+shared verbatim with the distributed worker runtime (:mod:`repro.dist`);
+this module only decides partition *placement* (round-robin pages) and
+simulates the *exchange* in-process. The real exchange — page-serialized
+transfers between workers — is :class:`repro.dist.driver
+.DistributedExecutor`, which runs the same kernels.
+
 A row-at-a-time *volcano* interpreter (:class:`NaiveExecutor`) implements
 identical semantics one record at a time — the execution model the paper
 argues is obsolete — and serves as the measured baseline for the
@@ -18,15 +25,17 @@ paper-claims validation benchmarks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.compiler import compile_graph
-from repro.core.computations import Computation, WriteSet
-from repro.core.lambdas import METHOD_REGISTRY
+from repro.core.computations import Computation
 from repro.core.optimizer import OptimizerReport, optimize
 from repro.core.physical import PhysicalPlan, plan_physical
+from repro.core.relops import (AggMap, assemble_output, batch_kernel,
+                               batch_topk, bytes_of, concat_batches,
+                               merge_topk, probe_join, split_by_hash)
 from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.objectmodel.store import PagedStore
 from repro.objectmodel.vectorlist import VectorList
@@ -44,109 +53,6 @@ class ExecStats:
     broadcast_joins: int = 0
     hash_partition_joins: int = 0
     optimizer: Optional[OptimizerReport] = None
-
-
-def _hash_col(col: np.ndarray) -> np.ndarray:
-    """Stable vectorized key hashing."""
-    if col.dtype.kind in "iu":
-        x = col.astype(np.int64, copy=True)
-        x = (x ^ (x >> 33)) * np.int64(-49064778989728563)  # splitmix64-ish
-        return x ^ (x >> 29)
-    if col.dtype.kind == "f":
-        return _hash_col(col.view(np.int64) if col.dtype.itemsize == 8
-                         else col.astype(np.float64).view(np.int64))
-    return np.fromiter((hash(x) for x in col.tolist()), np.int64,
-                       count=len(col))
-
-
-def _stage_eval(op: TCAPOp, cols: Sequence[np.ndarray],
-                n_rows: int = 1) -> np.ndarray:
-    t = op.info["type"]
-    if t == "attAccess":
-        return cols[0][op.info["attName"]]
-    if t == "methodCall":
-        fn = METHOD_REGISTRY[(op.info["onType"], op.info["methodName"])]
-        return fn(cols[0])
-    if t == "native":
-        return op.info["fn"](*cols)
-    if t == "const":
-        n = len(cols[0]) if cols else n_rows
-        return np.full(n, op.info["value"])
-    if t == "rename":
-        return cols[0]
-    if t in ("cmp", "bool", "arith"):
-        o = op.info["op"]
-        if o == "!":
-            return np.logical_not(cols[0])
-        a, b = cols
-        return {
-            "==": lambda: a == b, "!=": lambda: a != b,
-            ">": lambda: a > b, ">=": lambda: a >= b,
-            "<": lambda: a < b, "<=": lambda: a <= b,
-            "&&": lambda: np.logical_and(a, b),
-            "||": lambda: np.logical_or(a, b),
-            "+": lambda: a + b, "-": lambda: a - b,
-            "*": lambda: a * b, "/": lambda: a / b,
-        }[o]()
-    raise ValueError(f"unknown stage type {t}")
-
-
-_COMBINE = {
-    "sum": lambda acc, inv, vals, n: _scatter_add(acc, inv, vals, n),
-    "max": lambda acc, inv, vals, n: _scatter_minmax(acc, inv, vals, n, np.maximum),
-    "min": lambda acc, inv, vals, n: _scatter_minmax(acc, inv, vals, n, np.minimum),
-}
-
-
-def _scatter_add(acc, inv, vals, n):
-    if acc is None:
-        shape = (n,) + vals.shape[1:]
-        acc = np.zeros(shape, dtype=np.result_type(vals.dtype, np.float64)
-                       if vals.dtype.kind == "f" else vals.dtype)
-    np.add.at(acc, inv, vals)
-    return acc
-
-
-def _scatter_minmax(acc, inv, vals, n, fn):
-    init = -np.inf if fn is np.maximum else np.inf
-    if acc is None:
-        acc = np.full((n,) + vals.shape[1:], init, dtype=np.float64)
-    fn.at(acc, inv, vals)
-    return acc
-
-
-class _AggMap:
-    """A pre-aggregation map (the per-thread PC ``Map`` on a combiner page)."""
-
-    def __init__(self, combiner: str):
-        self.combiner = combiner
-        self.data: Dict[Any, Any] = {}
-
-    def absorb(self, keys: np.ndarray, vals: np.ndarray) -> None:
-        uniq, inv = np.unique(keys, return_inverse=True)
-        acc = _COMBINE[self.combiner](None, inv, vals, len(uniq))
-        for i, k in enumerate(uniq.tolist()):
-            cur = self.data.get(k)
-            if cur is None:
-                self.data[k] = acc[i]
-            elif self.combiner == "sum":
-                self.data[k] = cur + acc[i]
-            elif self.combiner == "max":
-                self.data[k] = np.maximum(cur, acc[i])
-            else:
-                self.data[k] = np.minimum(cur, acc[i])
-
-    def merge(self, other: "_AggMap") -> None:
-        for k, v in other.data.items():
-            cur = self.data.get(k)
-            if cur is None:
-                self.data[k] = v
-            elif self.combiner == "sum":
-                self.data[k] = cur + v
-            elif self.combiner == "max":
-                self.data[k] = np.maximum(cur, v)
-            else:
-                self.data[k] = np.minimum(cur, v)
 
 
 class Executor:
@@ -177,7 +83,8 @@ class Executor:
         if self.do_optimize:
             prog, rep = optimize(prog)
             self.stats.optimizer = rep
-        plan = plan_physical(prog, self.store, self.broadcast_threshold)
+        plan = plan_physical(prog, self.store, self.broadcast_threshold,
+                             num_partitions=self.P)
         return self._run(prog, plan)
 
     # --------------------------------------------------------- internals
@@ -190,28 +97,9 @@ class Executor:
         for op in prog.ops:
             if op.op == "SCAN":
                 data[op.out] = self._scan(op)
-            elif op.op == "APPLY":
-                data[op.out] = self._map_batches(
-                    data[op.in_list],
-                    lambda vl, op=op: vl.extended(
-                        op.copy_cols, op.new_cols[0],
-                        _stage_eval(op, [vl[c] for c in op.apply_cols],
-                                    vl.num_rows or 0))
-                    if op.new_cols else vl.project(op.copy_cols))
-            elif op.op == "FILTER":
-                data[op.out] = self._map_batches(
-                    data[op.in_list],
-                    lambda vl: vl.filtered(np.asarray(vl[op.apply_cols[0]],
-                                                      bool), op.copy_cols))
-            elif op.op == "FLATTEN":
-                data[op.out] = self._map_batches(
-                    data[op.in_list], lambda vl: self._flatten(op, vl))
-            elif op.op == "HASH":
-                data[op.out] = self._map_batches(
-                    data[op.in_list],
-                    lambda vl: vl.extended(
-                        op.copy_cols, op.new_cols[0],
-                        _hash_col(np.asarray(vl[op.apply_cols[0]]))))
+            elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
+                data[op.out] = self._map_batches(data[op.in_list],
+                                                 batch_kernel(op))
             elif op.op == "JOIN":
                 data[op.out] = self._join(op, data[op.in_list],
                                           data[op.in_list2],
@@ -241,73 +129,41 @@ class Executor:
     def _map_batches(self, parts, fn) -> List[List[VectorList]]:
         return [[fn(vl) for vl in batches] for batches in parts]
 
-    def _flatten(self, op: TCAPOp, vl: VectorList) -> VectorList:
-        objcol = vl[op.apply_cols[0]]
-        counts = np.fromiter((len(x) for x in objcol), np.int64,
-                             count=len(objcol))
-        out = VectorList()
-        flat = (np.concatenate([np.asarray(x) for x in objcol])
-                if counts.sum() else np.empty(0))
-        out.append(op.out_cols[0], flat)
-        for c in op.copy_cols:
-            out.append(c, np.repeat(vl[c], counts))
-        return out
-
     # ------------------------------------------------------------- join
     def _join(self, op: TCAPOp, left, right, algo: str
               ) -> List[List[VectorList]]:
-        lh, rh = op.apply_cols[0], op.apply_cols2[0]
         if algo == "broadcast":
             self.stats.broadcast_joins += 1
-            build_all = _concat_parts(right)
-            self.stats.shuffle_bytes += _bytes_of(build_all) * max(0, self.P - 1)
+            build_all = concat_batches([vl for bl in right for vl in bl])
+            self.stats.shuffle_bytes += bytes_of(build_all) * max(0, self.P - 1)
             rparts = [build_all] * self.P
-            lparts = [_concat_parts([p]) for p in left]
+            lparts = [concat_batches(p) for p in left]
         else:
             self.stats.hash_partition_joins += 1
-            lparts = self._shuffle(left, lh)
-            rparts = self._shuffle(right, rh)
+            lparts = self._shuffle(left, op.apply_cols[0])
+            rparts = self._shuffle(right, op.apply_cols2[0])
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p in range(self.P):
-            lvl, rvl = lparts[p], rparts[p]
-            if lvl.num_rows in (None, 0) or rvl.num_rows in (None, 0):
+            probed = probe_join(op, lparts[p], rparts[p])
+            if probed is None:
                 continue
-            lcode = np.asarray(lvl[lh])
-            rcode = np.asarray(rvl[rh])
-            order = np.argsort(rcode, kind="stable")
-            rsorted = rcode[order]
-            lo = np.searchsorted(rsorted, lcode, "left")
-            hi = np.searchsorted(rsorted, lcode, "right")
-            counts = hi - lo
-            l_idx = np.repeat(np.arange(len(lcode)), counts)
-            starts = np.repeat(lo, counts)
-            within = np.arange(len(starts)) - np.repeat(
-                np.cumsum(counts) - counts, counts)
-            r_idx = order[starts + within]
-            self.stats.rows_joined += len(l_idx)
-            res = VectorList()
-            for c in op.copy_cols:
-                res.append(c, np.asarray(lvl[c])[l_idx])
-            for c in op.copy_cols2:
-                res.append(c, np.asarray(rvl[c])[r_idx])
+            res, n = probed
+            self.stats.rows_joined += n
             out[p].append(res)
         return out
 
-    def _shuffle(self, parts, hash_col: str) -> List[VectorList]:
+    def _shuffle(self, parts, hash_name: str) -> List[VectorList]:
         """Repartition batches by hash % P (the network shuffle)."""
         buckets: List[List[VectorList]] = [[] for _ in range(self.P)]
         for pi, batches in enumerate(parts):
             for vl in batches:
-                h = np.asarray(vl[hash_col])
-                dest = (h % self.P + self.P) % self.P
-                for p in range(self.P):
-                    mask = dest == p
-                    if mask.any():
-                        sub = vl.filtered(mask, vl.names)
-                        if p != pi:
-                            self.stats.shuffle_bytes += _bytes_of(sub)
-                        buckets[p].append(sub)
-        return [_concat_parts([b]) for b in buckets]
+                for p, sub in enumerate(split_by_hash(vl, hash_name, self.P)):
+                    if sub is None:
+                        continue
+                    if p != pi:
+                        self.stats.shuffle_bytes += bytes_of(sub)
+                    buckets[p].append(sub)
+        return [concat_batches(b) for b in buckets]
 
     # -------------------------------------------------------------- agg
     def _aggregate(self, op: TCAPOp, parts) -> List[List[VectorList]]:
@@ -316,16 +172,14 @@ class Executor:
         # stage 1: per-partition pre-aggregation (combiner pages)
         partials = []
         for batches in parts:
-            m = _AggMap(combiner)
+            m = AggMap(combiner)
             for vl in batches:
                 m.absorb(np.asarray(vl[kcol]), np.asarray(vl[vcol]))
             partials.append(m)
         # shuffle partials by key hash, final aggregate per partition
-        finals = [_AggMap(combiner) for _ in range(self.P)]
+        finals = [AggMap(combiner) for _ in range(self.P)]
         for m in partials:
-            split: List[_AggMap] = [_AggMap(combiner) for _ in range(self.P)]
-            for k, v in m.data.items():
-                split[hash(k) % self.P].data[k] = v
+            split = m.split_by_key_hash(self.P)
             for p in range(self.P):
                 if split[p].data:
                     self.stats.shuffle_bytes += sum(
@@ -333,68 +187,29 @@ class Executor:
                     finals[p].merge(split[p])
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p, m in enumerate(finals):
-            if not m.data:
-                continue
-            keys = np.array(list(m.data.keys()))
-            vals = np.stack([np.asarray(v) for v in m.data.values()]) \
-                if m.data else np.empty(0)
-            out[p].append(VectorList({"key": keys, "value": vals}))
+            emitted = m.emit()
+            if emitted is not None:
+                out[p].append(emitted)
         return out
 
     def _topk(self, op: TCAPOp, parts) -> List[List[VectorList]]:
-        k = int(op.info["k"])
-        scol, pcol = op.apply_cols
         best_s: List[np.ndarray] = []
         best_p: List[np.ndarray] = []
         for batches in parts:  # per-partition top-k, then merge
             for vl in batches:
-                s = np.asarray(vl[scol])
-                idx = np.argsort(-s, kind="stable")[:k]
-                best_s.append(s[idx])
-                best_p.append(np.asarray(vl[pcol])[idx])
-        if not best_s:
-            return [[] for _ in range(self.P)]
-        s = np.concatenate(best_s)
-        p = np.concatenate(best_p)
-        idx = np.argsort(-s, kind="stable")[:k]
+                s, pay = batch_topk(op, vl)
+                best_s.append(s)
+                best_p.append(pay)
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
-        out[0].append(VectorList({"score": s[idx], "payload": p[idx]}))
+        merged = merge_topk(op, best_s, best_p)
+        if merged is not None:
+            out[0].append(merged)
         return out
 
     def _output(self, op: TCAPOp, parts) -> Dict[str, np.ndarray]:
-        cols: Dict[str, List[np.ndarray]] = {c: [] for c in op.apply_cols}
-        for batches in parts:
-            for vl in batches:
-                for c in op.apply_cols:
-                    cols[c].append(np.asarray(vl[c]))
-        out = {c: (np.concatenate(v) if v else np.empty(0))
-               for c, v in cols.items()}
-        n = len(next(iter(out.values()))) if out else 0
-        self.stats.rows_output = n
-        set_name = op.info["set"]
-        if len(out) == 1 and self.write_outputs:
-            rec = next(iter(out.values()))
-            if set_name not in self.store.sets and rec.dtype != object:
-                self.store.send_data(set_name, rec)
-        return out
-
-
-def _concat_parts(parts: List[List[VectorList]]) -> VectorList:
-    batches = [vl for bl in parts for vl in bl]
-    if not batches:
-        return VectorList()
-    out = batches[0]
-    for b in batches[1:]:
-        out = out.concat(b)
-    return out
-
-
-def _bytes_of(vl: VectorList) -> int:
-    total = 0
-    for _, c in vl.items():
-        arr = np.asarray(c)
-        total += arr.nbytes if arr.dtype != object else len(arr) * 64
-    return total
+        return assemble_output(
+            op, [vl for batches in parts for vl in batches],
+            self.stats, self.store, self.write_outputs)
 
 
 class NaiveExecutor(Executor):

@@ -55,7 +55,23 @@ class LambdaArg:
         return LambdaTerm("self", [], {"slot": self.slot,
                                        "type": self.type_name}, args=(self,))
 
+    def col(self, attr: str) -> "LambdaTerm":
+        """Explicit column access: ``arg.col("name")``.
+
+        Unlike the ``arg.<attr>`` sugar, this works for record fields
+        shadowed by :class:`LambdaArg`'s real attributes — see
+        :meth:`__getattr__`."""
+        return make_lambda_from_member(self, attr)
+
     def __getattr__(self, attr: str) -> "LambdaTerm":
+        """``arg.salary`` sugar for :func:`make_lambda_from_member`.
+
+        Footgun: this only fires for attributes Python does NOT find on the
+        object, so record fields named after a real LambdaArg attribute or
+        method — ``name``, ``slot``, ``type_name``, ``term``, ``col`` —
+        resolve to that attribute instead of a column access. Use
+        :meth:`col` (``arg.col("name")``) or
+        :func:`make_lambda_from_member` for those columns."""
         if attr.startswith("_"):
             raise AttributeError(attr)
         return make_lambda_from_member(self, attr)

@@ -6,7 +6,12 @@ Two decisions mirror the paper exactly:
    under a threshold (the paper uses 2 GB), hash-partition join otherwise.
    The estimate traces the build pipeline to its SCAN and uses catalog
    statistics (record count × record size); like the paper we have no value
-   statistics, so filters apply a fixed selectivity discount.
+   statistics, so filters apply a fixed selectivity discount. When the
+   partition count is known, the threshold check is additionally priced
+   against the real transfer cost of each algorithm: a broadcast ships the
+   build side to P-1 peers, a hash-partition shuffle ships a (P-1)/P
+   fraction of *both* sides — broadcast must win on modeled bytes moved,
+   not just clear the absolute threshold.
 2. **Pipeline decomposition** — the TCAP DAG is split into pipelines at
    *pipe sinks* (JOIN build sides, AGG, TOPK, OUTPUT); each pipeline runs
    stage-fused over vector lists.
@@ -59,14 +64,26 @@ def estimate_bytes(prog: TCAPProgram, list_name: str, store: PagedStore,
 
 
 def plan_physical(prog: TCAPProgram, store: PagedStore,
-                  broadcast_threshold: int = 2 << 30) -> PhysicalPlan:
+                  broadcast_threshold: int = 2 << 30,
+                  num_partitions: Optional[int] = None) -> PhysicalPlan:
     memo: Dict[str, float] = {}
     algo: Dict[int, str] = {}
     for op in prog.ops:
         if op.op == "JOIN":
             build = estimate_bytes(prog, op.in_list2, store, memo)
-            algo[id(op)] = ("broadcast" if build < broadcast_threshold
-                            else "hash_partition")
+            choice = "broadcast" if build < broadcast_threshold \
+                else "hash_partition"
+            if choice == "broadcast" and num_partitions and num_partitions > 1:
+                # price against modeled transfer bytes: broadcast replicates
+                # the build side to P-1 peers; a shuffle moves the non-local
+                # (P-1)/P fraction of both sides once.
+                P = num_partitions
+                probe = estimate_bytes(prog, op.in_list, store, memo)
+                bcast_cost = build * (P - 1)
+                shuffle_cost = (build + probe) * (P - 1) / P
+                if bcast_cost > shuffle_cost:
+                    choice = "hash_partition"
+            algo[id(op)] = choice
 
     pipelines: List[List[TCAPOp]] = []
     cur: List[TCAPOp] = []

@@ -1,0 +1,307 @@
+"""Per-partition relational operator kernels (paper §5.2, Appendix C/D).
+
+Everything here operates on ONE partition's data — a vector list or a list
+of vector-list batches — with no knowledge of where partitions live or how
+they exchange data. The local simulated :class:`~repro.core.executor
+.Executor` and the distributed :class:`~repro.dist.driver
+.DistributedExecutor` both call these kernels, so the two backends differ
+only in partition *placement* and *exchange*, never in operator semantics.
+That is what makes byte-identical results across backends a structural
+property rather than a testing accident.
+
+Kernels:
+
+* :func:`stage_eval` / :func:`batch_kernel` — the compiled pipeline stages
+  (APPLY / FILTER / FLATTEN / HASH) over one vector-list batch;
+* :func:`hash_col` — stable vectorized key hashing (drives both the HASH
+  op and shuffle destinations);
+* :func:`split_by_hash` — partition one batch by ``hash % P`` (the shuffle
+  kernel: what goes on the wire is decided here, identically for the
+  simulated and the real exchange);
+* :func:`probe_join` — sort-probe equi-join of two co-partitioned sides;
+* :class:`AggMap` — PC's pre-aggregation map (a "combiner page");
+* :func:`batch_topk` / :func:`merge_topk` — per-partition top-k and the
+  global gather-merge;
+* :func:`assemble_output` — the OUTPUT contract (column concat in
+  partition-then-batch order, row count, single-column write-back);
+* :func:`concat_batches` / :func:`bytes_of` — glue.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lambdas import METHOD_REGISTRY
+from repro.core.tcap import TCAPOp
+from repro.objectmodel.vectorlist import VectorList
+
+__all__ = [
+    "AggMap", "assemble_output", "batch_kernel", "batch_topk", "bytes_of",
+    "concat_batches", "hash_col", "merge_topk", "probe_join",
+    "split_by_hash", "stage_eval",
+]
+
+
+def hash_col(col: np.ndarray) -> np.ndarray:
+    """Stable vectorized key hashing."""
+    if col.dtype.kind in "iu":
+        x = col.astype(np.int64, copy=True)
+        x = (x ^ (x >> 33)) * np.int64(-49064778989728563)  # splitmix64-ish
+        return x ^ (x >> 29)
+    if col.dtype.kind == "f":
+        return hash_col(col.view(np.int64) if col.dtype.itemsize == 8
+                        else col.astype(np.float64).view(np.int64))
+    return np.fromiter((hash(x) for x in col.tolist()), np.int64,
+                       count=len(col))
+
+
+def stage_eval(op: TCAPOp, cols: Sequence[np.ndarray],
+               n_rows: int = 1) -> np.ndarray:
+    t = op.info["type"]
+    if t == "attAccess":
+        return cols[0][op.info["attName"]]
+    if t == "methodCall":
+        fn = METHOD_REGISTRY[(op.info["onType"], op.info["methodName"])]
+        return fn(cols[0])
+    if t == "native":
+        return op.info["fn"](*cols)
+    if t == "const":
+        n = len(cols[0]) if cols else n_rows
+        return np.full(n, op.info["value"])
+    if t == "rename":
+        return cols[0]
+    if t in ("cmp", "bool", "arith"):
+        o = op.info["op"]
+        if o == "!":
+            return np.logical_not(cols[0])
+        a, b = cols
+        return {
+            "==": lambda: a == b, "!=": lambda: a != b,
+            ">": lambda: a > b, ">=": lambda: a >= b,
+            "<": lambda: a < b, "<=": lambda: a <= b,
+            "&&": lambda: np.logical_and(a, b),
+            "||": lambda: np.logical_or(a, b),
+            "+": lambda: a + b, "-": lambda: a - b,
+            "*": lambda: a * b, "/": lambda: a / b,
+        }[o]()
+    raise ValueError(f"unknown stage type {t}")
+
+
+def _flatten(op: TCAPOp, vl: VectorList) -> VectorList:
+    objcol = vl[op.apply_cols[0]]
+    counts = np.fromiter((len(x) for x in objcol), np.int64,
+                         count=len(objcol))
+    out = VectorList()
+    flat = (np.concatenate([np.asarray(x) for x in objcol])
+            if counts.sum() else np.empty(0))
+    out.append(op.out_cols[0], flat)
+    for c in op.copy_cols:
+        out.append(c, np.repeat(vl[c], counts))
+    return out
+
+
+def batch_kernel(op: TCAPOp) -> Callable[[VectorList], VectorList]:
+    """The per-batch transform for a pipelined (non-exchange) TCAP op."""
+    if op.op == "APPLY":
+        if op.new_cols:
+            return lambda vl: vl.extended(
+                op.copy_cols, op.new_cols[0],
+                stage_eval(op, [vl[c] for c in op.apply_cols],
+                           vl.num_rows or 0))
+        return lambda vl: vl.project(op.copy_cols)
+    if op.op == "FILTER":
+        return lambda vl: vl.filtered(
+            np.asarray(vl[op.apply_cols[0]], bool), op.copy_cols)
+    if op.op == "FLATTEN":
+        return lambda vl: _flatten(op, vl)
+    if op.op == "HASH":
+        return lambda vl: vl.extended(
+            op.copy_cols, op.new_cols[0],
+            hash_col(np.asarray(vl[op.apply_cols[0]])))
+    raise ValueError(f"{op.op} is not a per-batch pipelined op")
+
+
+def split_by_hash(vl: VectorList, hash_name: str, P: int
+                  ) -> List[Optional[VectorList]]:
+    """Partition one batch by ``hash % P``; ``None`` where no rows land
+    (nothing goes on the wire for that destination)."""
+    h = np.asarray(vl[hash_name])
+    dest = (h % P + P) % P
+    out: List[Optional[VectorList]] = []
+    for p in range(P):
+        mask = dest == p
+        out.append(vl.filtered(mask, vl.names) if mask.any() else None)
+    return out
+
+
+def probe_join(op: TCAPOp, lvl: VectorList, rvl: VectorList
+               ) -> Optional[Tuple[VectorList, int]]:
+    """Sort-probe equi-join of two co-partitioned sides; returns the joined
+    batch and its row count, or ``None`` when either side is empty."""
+    lh, rh = op.apply_cols[0], op.apply_cols2[0]
+    if lvl.num_rows in (None, 0) or rvl.num_rows in (None, 0):
+        return None
+    lcode = np.asarray(lvl[lh])
+    rcode = np.asarray(rvl[rh])
+    order = np.argsort(rcode, kind="stable")
+    rsorted = rcode[order]
+    lo = np.searchsorted(rsorted, lcode, "left")
+    hi = np.searchsorted(rsorted, lcode, "right")
+    counts = hi - lo
+    l_idx = np.repeat(np.arange(len(lcode)), counts)
+    starts = np.repeat(lo, counts)
+    within = np.arange(len(starts)) - np.repeat(
+        np.cumsum(counts) - counts, counts)
+    r_idx = order[starts + within]
+    res = VectorList()
+    for c in op.copy_cols:
+        res.append(c, np.asarray(lvl[c])[l_idx])
+    for c in op.copy_cols2:
+        res.append(c, np.asarray(rvl[c])[r_idx])
+    return res, len(l_idx)
+
+
+# ------------------------------------------------------------ aggregation
+_COMBINE = {
+    "sum": lambda acc, inv, vals, n: _scatter_add(acc, inv, vals, n),
+    "max": lambda acc, inv, vals, n: _scatter_minmax(acc, inv, vals, n,
+                                                     np.maximum),
+    "min": lambda acc, inv, vals, n: _scatter_minmax(acc, inv, vals, n,
+                                                     np.minimum),
+}
+
+
+def _scatter_add(acc, inv, vals, n):
+    if acc is None:
+        shape = (n,) + vals.shape[1:]
+        acc = np.zeros(shape, dtype=np.result_type(vals.dtype, np.float64)
+                       if vals.dtype.kind == "f" else vals.dtype)
+    np.add.at(acc, inv, vals)
+    return acc
+
+
+def _scatter_minmax(acc, inv, vals, n, fn):
+    init = -np.inf if fn is np.maximum else np.inf
+    if acc is None:
+        acc = np.full((n,) + vals.shape[1:], init, dtype=np.float64)
+    fn.at(acc, inv, vals)
+    return acc
+
+
+class AggMap:
+    """A pre-aggregation map (the per-thread PC ``Map`` on a combiner page).
+
+    Key order is insertion order everywhere (absorb batches in batch order,
+    merge peers in rank order) — both executors preserve it, which is what
+    keeps final AGG output ordering identical across backends.
+    """
+
+    def __init__(self, combiner: str):
+        self.combiner = combiner
+        self.data: Dict[Any, Any] = {}
+
+    def absorb(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        uniq, inv = np.unique(keys, return_inverse=True)
+        acc = _COMBINE[self.combiner](None, inv, vals, len(uniq))
+        for i, k in enumerate(uniq.tolist()):
+            cur = self.data.get(k)
+            if cur is None:
+                self.data[k] = acc[i]
+            elif self.combiner == "sum":
+                self.data[k] = cur + acc[i]
+            elif self.combiner == "max":
+                self.data[k] = np.maximum(cur, acc[i])
+            else:
+                self.data[k] = np.minimum(cur, acc[i])
+
+    def merge(self, other: "AggMap") -> None:
+        for k, v in other.data.items():
+            cur = self.data.get(k)
+            if cur is None:
+                self.data[k] = v
+            elif self.combiner == "sum":
+                self.data[k] = cur + v
+            elif self.combiner == "max":
+                self.data[k] = np.maximum(cur, v)
+            else:
+                self.data[k] = np.minimum(cur, v)
+
+    def split_by_key_hash(self, P: int) -> List["AggMap"]:
+        """Partition this map's entries by ``hash(key) % P`` (the AGG
+        shuffle kernel); insertion order is preserved within each split."""
+        out = [AggMap(self.combiner) for _ in range(P)]
+        for k, v in self.data.items():
+            out[hash(k) % P].data[k] = v
+        return out
+
+    def emit(self) -> Optional[VectorList]:
+        """The final AGG output batch for this partition (``None`` if the
+        partition holds no groups)."""
+        if not self.data:
+            return None
+        keys = np.array(list(self.data.keys()))
+        vals = np.stack([np.asarray(v) for v in self.data.values()])
+        return VectorList({"key": keys, "value": vals})
+
+
+# ------------------------------------------------------------------ top-k
+def batch_topk(op: TCAPOp, vl: VectorList
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-batch top-k: the local pre-selection before the gather-merge."""
+    k = int(op.info["k"])
+    scol, pcol = op.apply_cols
+    s = np.asarray(vl[scol])
+    idx = np.argsort(-s, kind="stable")[:k]
+    return s[idx], np.asarray(vl[pcol])[idx]
+
+
+def merge_topk(op: TCAPOp, best_s: Sequence[np.ndarray],
+               best_p: Sequence[np.ndarray]) -> Optional[VectorList]:
+    """Gather-merge of per-batch top-k candidates (concatenation order is
+    the tie-break, so callers must append in partition-then-batch order)."""
+    if not best_s:
+        return None
+    k = int(op.info["k"])
+    s = np.concatenate(list(best_s))
+    p = np.concatenate(list(best_p))
+    idx = np.argsort(-s, kind="stable")[:k]
+    return VectorList({"score": s[idx], "payload": p[idx]})
+
+
+# ----------------------------------------------------------------- output
+def assemble_output(op: TCAPOp, batches: Sequence[VectorList], stats,
+                    store, write_outputs: bool) -> Dict[str, np.ndarray]:
+    """The OUTPUT contract, shared by both backends: concatenate the
+    projected columns (callers pass batches in partition-then-batch
+    order), record ``rows_output``, and persist a single packed column
+    under the OUTPUT set name when write-back is on."""
+    cols: Dict[str, List[np.ndarray]] = {c: [] for c in op.apply_cols}
+    for vl in batches:
+        for c in op.apply_cols:
+            cols[c].append(np.asarray(vl[c]))
+    out = {c: (np.concatenate(v) if v else np.empty(0))
+           for c, v in cols.items()}
+    stats.rows_output = len(next(iter(out.values()))) if out else 0
+    set_name = op.info["set"]
+    if len(out) == 1 and write_outputs:
+        rec = next(iter(out.values()))
+        if set_name not in store.sets and rec.dtype != object:
+            store.send_data(set_name, rec)
+    return out
+
+
+# ------------------------------------------------------------------- glue
+def concat_batches(batches: Sequence[VectorList]) -> VectorList:
+    out: Optional[VectorList] = None
+    for b in batches:
+        out = b if out is None else out.concat(b)
+    return out if out is not None else VectorList()
+
+
+def bytes_of(vl: VectorList) -> int:
+    total = 0
+    for _, c in vl.items():
+        arr = np.asarray(c)
+        total += arr.nbytes if arr.dtype != object else len(arr) * 64
+    return total

@@ -9,19 +9,28 @@ A Session owns:
   synthesized by this session come from its own numbering stream, so two
   sessions in one process never collide (set names are additionally probed
   against the store, which covers sessions *sharing* a store),
-* the executor configuration (partition count, vector width, broadcast
-  threshold, vectorized vs volcano),
+* the executor configuration (backend, partition/worker count, vector
+  width, broadcast threshold, vectorized vs volcano),
 * a **plan cache**: optimized TCAP programs memoized by the unoptimized
   program's structural signature (:func:`~repro.core.tcap
   .structural_signature`), so a repeated query skips the rule-engine
-  fixpoint entirely. Cache entries pin the unoptimized program too, keeping
-  native-lambda objects alive so id-based keys can never be reused by a
-  different function.
+  fixpoint entirely. The cache is a bounded LRU (``plan_cache_size``,
+  default 64) with hit/miss/eviction counters, so long-lived sessions
+  cannot grow it without bound. Cache entries pin the unoptimized program
+  too, keeping native-lambda objects alive so id-based keys can never be
+  reused by a different function.
+
+Backends: ``backend="local"`` (default) simulates P partitions in-process
+(:class:`~repro.core.executor.Executor`); ``backend="workers"`` runs the
+real driver + N worker runtime (:class:`~repro.dist.driver
+.DistributedExecutor`) with page-serialized exchanges — same kernels,
+identical results, real ``shuffle_bytes``.
 
 Usage::
 
-    sess = Session(num_partitions=4)
-    emps = sess.load("employees", records, type_name="Employee")
+    sess = Session(num_partitions=4)            # or backend="workers",
+    emps = sess.load("employees", records,      #    num_workers=4
+                     type_name="Employee")
     payroll = (emps.filter(lambda e: e.salary > 60_000)
                    .aggregate(key="dept", value="salary"))
     print(payroll.explain())
@@ -30,6 +39,7 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -59,24 +69,66 @@ class Session:
     """Owns storage, naming, executor configuration, and the plan cache."""
 
     def __init__(self, store: Optional[PagedStore] = None, db: str = "db",
-                 num_partitions: int = 4, vector_rows: int = 8192,
+                 num_partitions: Optional[int] = None,
+                 vector_rows: int = 8192,
                  do_optimize: bool = True,
                  broadcast_threshold_bytes: int = 2 << 30,
-                 executor_cls=Executor):
+                 executor_cls=Executor, backend: str = "local",
+                 num_workers: Optional[int] = None,
+                 worker_kind: Optional[str] = None,
+                 plan_cache_size: int = 64):
         self.store = store if store is not None else PagedStore()
         self.db = db
         self.scope = NameScope()
         self.do_optimize = do_optimize
+        self.backend = backend
         # the session drives optimization itself (through the plan cache),
         # so its executor always runs programs as given.
-        self.executor = executor_cls(
-            self.store, num_partitions=num_partitions,
-            vector_rows=vector_rows, do_optimize=False,
-            broadcast_threshold_bytes=broadcast_threshold_bytes,
-            write_outputs=False)
-        self._plan_cache: Dict[Tuple, _CacheEntry] = {}
+        if backend == "workers":
+            if executor_cls is not Executor:
+                raise ValueError(
+                    "backend='workers' chooses its own executor — drop the "
+                    "executor_cls argument")
+            if (num_partitions is not None and num_workers is not None
+                    and num_partitions != num_workers):
+                raise ValueError(
+                    f"num_partitions={num_partitions} and "
+                    f"num_workers={num_workers} disagree — the workers "
+                    "backend takes one worker per partition; pass just "
+                    "num_workers")
+            from repro.dist.driver import DistributedExecutor
+            self.executor = DistributedExecutor(
+                self.store,
+                num_workers=num_workers or num_partitions or 4,
+                vector_rows=vector_rows, do_optimize=False,
+                broadcast_threshold_bytes=broadcast_threshold_bytes,
+                write_outputs=False, worker_kind=worker_kind or "thread")
+        elif backend == "local":
+            if num_workers is not None:
+                raise ValueError(
+                    "num_workers only applies to backend='workers' "
+                    "(use num_partitions for the local simulation)")
+            if worker_kind is not None:
+                raise ValueError(
+                    "worker_kind only applies to backend='workers' "
+                    "(the local backend simulates partitions in-process)")
+            self.executor = executor_cls(
+                self.store,
+                num_partitions=4 if num_partitions is None
+                else num_partitions,
+                vector_rows=vector_rows, do_optimize=False,
+                broadcast_threshold_bytes=broadcast_threshold_bytes,
+                write_outputs=False)
+        else:
+            raise ValueError(f"unknown backend {backend!r} "
+                             "(expected 'local' or 'workers')")
+        if plan_cache_size < 1:
+            raise ValueError("plan_cache_size must be >= 1")
+        self.plan_cache_size = plan_cache_size
+        self._plan_cache: "OrderedDict[Tuple, _CacheEntry]" = OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.cache_evictions = 0
         self.last_stats = None
         self.last_report: Optional[OptimizerReport] = None
 
@@ -125,11 +177,15 @@ class Session:
         entry = self._plan_cache.get(key)
         if entry is not None:
             self.cache_hits += 1
+            self._plan_cache.move_to_end(key)  # LRU touch
             return (self._rebind_output(entry.optimized, ds.output_set),
                     entry.report)
         opt, rep = optimize(prog)
         self.cache_misses += 1
         self._plan_cache[key] = _CacheEntry(prog, opt, rep)
+        while len(self._plan_cache) > self.plan_cache_size:
+            self._plan_cache.popitem(last=False)
+            self.cache_evictions += 1
         return opt, rep
 
     @staticmethod
@@ -186,7 +242,10 @@ class Session:
     def _explain(self, ds: Dataset) -> str:
         prog, rep = self._plan(ds)
         plan = plan_physical(prog, self.store,
-                             self.executor.broadcast_threshold)
+                             self.executor.broadcast_threshold,
+                             num_partitions=self.executor.P)
+        backend = (f"workers x{self.executor.P}" if self.backend == "workers"
+                   else f"local sim x{self.executor.P}")
         lines = [f"== optimized TCAP ({len(prog)} ops) =="]
         if rep is not None:
             lines.append(
@@ -196,7 +255,7 @@ class Session:
                 f"{rep.dead_ops_removed}")
         lines.append(prog.to_text())
         lines.append(f"== physical plan: {len(plan.pipelines)} pipelines, "
-                     f"{self.executor.P} partitions ==")
+                     f"{self.executor.P} partitions ({backend}) ==")
         for i, pipe in enumerate(plan.pipelines):
             stages = " -> ".join(op.op for op in pipe)
             lines.append(f"  pipeline {i}: {stages}")
@@ -206,9 +265,30 @@ class Session:
                     est = plan.estimates.get(op.in_list2, 0.0)
                     lines.append(f"    join: {algo} "
                                  f"(build side ~{est:,.0f} bytes)")
+        lines.extend(self._explain_last_run())
         return "\n".join(lines)
+
+    def _explain_last_run(self) -> list:
+        """Execution stats from the session's most recent query, if any —
+        for backend='workers' the shuffle_bytes are real serialized page
+        traffic, reported per worker."""
+        st = self.last_stats
+        if st is None:
+            return []
+        lines = [f"== last run: rows_scanned={st.rows_scanned}, "
+                 f"rows_output={st.rows_output}, "
+                 f"shuffle_bytes={st.shuffle_bytes} =="]
+        worker_stats = getattr(self.executor, "worker_stats", None)
+        if worker_stats:
+            per = ", ".join(f"w{i}={ws.shuffle_bytes}"
+                            for i, ws in enumerate(worker_stats))
+            lines.append(f"  per-worker shuffle_bytes (page-serialized): "
+                         f"{per}")
+        return lines
 
     # ------------------------------------------------------------ stats
     def plan_cache_info(self) -> Dict[str, int]:
         return {"hits": self.cache_hits, "misses": self.cache_misses,
-                "entries": len(self._plan_cache)}
+                "entries": len(self._plan_cache),
+                "evictions": self.cache_evictions,
+                "capacity": self.plan_cache_size}

@@ -1,0 +1,29 @@
+"""The distributed worker runtime (paper §5's staged distributed plans,
+made real): a driver plus N workers, each owning its own
+:class:`~repro.objectmodel.store.PagedStore` shard and executing pipeline
+stages locally, connected by an exchange layer implementing the three
+communication patterns the executor assumes — hash-partition shuffle
+(JOIN / AGG), broadcast (small-side joins), and gather-merge (TOPK,
+``collect()``).
+
+Transfers are page-granular: the wire format *is* the page byte format
+(:meth:`~repro.objectmodel.store.PagedSet.to_payloads` /
+:meth:`~repro.objectmodel.store.PagedSet.from_payloads`), so neither end
+parses anything. Workers run as threads or forked processes behind a
+common transport interface; a socket transport is a drop-in later.
+
+Front door: ``Session(backend="workers", num_workers=N)``, or
+:class:`~repro.dist.driver.DistributedExecutor` directly.
+"""
+from repro.dist.driver import DistributedExecutor
+from repro.dist.exchange import all_gather, exchange_partitions, gather_to
+from repro.dist.placement import build_shard_store, place_scans
+from repro.dist.protocol import (DRIVER, PageBlock, PickleBlock, decode_batch,
+                                 encode_batch)
+from repro.dist.worker import WorkerRuntime
+
+__all__ = [
+    "DistributedExecutor", "WorkerRuntime", "DRIVER", "PageBlock",
+    "PickleBlock", "encode_batch", "decode_batch", "all_gather",
+    "exchange_partitions", "gather_to", "place_scans", "build_shard_store",
+]

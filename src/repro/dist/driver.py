@@ -1,0 +1,300 @@
+"""The driver: plans, places, launches workers, routes, collects.
+
+:class:`DistributedExecutor` is interface-compatible with
+:class:`~repro.core.executor.Executor` (``execute`` /
+``execute_program`` / ``stats`` / ``P`` / ``broadcast_threshold`` /
+``write_outputs``), so the :class:`~repro.core.session.Session` front-end
+swaps it in behind ``backend="workers"`` with no other change. Per query
+it:
+
+1. optimizes (unless the session already did) and plans physically — the
+   broadcast decision priced against real transfer cost (``plan_physical``
+   with ``num_partitions``);
+2. places set pages round-robin and builds each worker's shard store
+   (page references: zero-copy in-process, copy-on-write across a fork);
+3. launches N workers (threads, or forked processes routed through the
+   driver star) running the SPMD :class:`~repro.dist.worker.WorkerRuntime`;
+4. collects OUTPUT page blocks and per-worker :class:`ExecStats`.
+
+``stats`` aggregates the workers: counts and ``shuffle_bytes`` are summed
+(shuffle_bytes is *real serialized page traffic* — shuffles, broadcasts,
+AGG partials, and the TOPK/OUTPUT gathers — unlike the local executor's
+estimate, which prices JOIN/AGG exchanges only); join-algorithm counters
+are taken per plan decision, not per worker. ``worker_stats[w]`` keeps
+worker ``w``'s own view for skew analysis.
+
+Worker kinds: ``"thread"`` (default; shares one address space — fine
+because TCAP execution is numpy-bound) and ``"fork"`` (real process
+isolation; requires the ``fork`` start method since TCAP programs carry
+native lambdas that cannot be pickled — they ride the fork image instead,
+and only page blocks cross process boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compiler import compile_graph
+from repro.core.computations import Computation
+from repro.core.executor import ExecStats
+from repro.core.optimizer import optimize
+from repro.core.physical import PhysicalPlan, plan_physical
+from repro.core.tcap import TCAPProgram
+from repro.core.relops import assemble_output
+from repro.dist.exchange import ProcessTransport, ThreadTransport
+from repro.dist.placement import build_shard_store, place_scans
+from repro.dist.protocol import ABORT, DRIVER, decode_batch
+from repro.dist.worker import worker_main
+from repro.objectmodel.store import PagedStore
+
+__all__ = ["DistributedExecutor"]
+
+
+class DistributedExecutor:
+    """Driver + N workers, each owning a PagedStore shard, exchanging
+    page-serialized data (the real realization of the plan the local
+    ``Executor`` simulates)."""
+
+    def __init__(self, store: PagedStore, num_workers: int = 4,
+                 vector_rows: int = 8192, do_optimize: bool = True,
+                 broadcast_threshold_bytes: int = 2 << 30,
+                 write_outputs: bool = True, worker_kind: str = "thread"):
+        if num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if worker_kind not in ("thread", "fork"):
+            raise ValueError(f"unknown worker_kind {worker_kind!r} "
+                             "(expected 'thread' or 'fork')")
+        self.store = store
+        self.P = num_workers
+        self.vector_rows = vector_rows
+        self.do_optimize = do_optimize
+        self.broadcast_threshold = broadcast_threshold_bytes
+        self.write_outputs = write_outputs
+        self.worker_kind = worker_kind
+        self.stats = ExecStats()
+        self.worker_stats: List[ExecStats] = []
+
+    # ------------------------------------------------------------ public
+    def execute(self, sink: Computation) -> Dict[str, np.ndarray]:
+        return self.execute_program(compile_graph(sink))
+
+    def execute_program(self, prog: TCAPProgram) -> Dict[str, np.ndarray]:
+        self.stats = ExecStats()
+        if self.do_optimize:
+            prog, rep = optimize(prog)
+            self.stats.optimizer = rep
+        plan = plan_physical(prog, self.store, self.broadcast_threshold,
+                             num_partitions=self.P)
+        placement = place_scans(prog, self.store, self.P)
+        shards = [build_shard_store(self.store, placement, w)
+                  for w in range(self.P)]
+        runtime = (_ThreadRuntime if self.worker_kind == "thread"
+                   else _ProcessRuntime)(self.P)
+        outputs, self.worker_stats = runtime.run(
+            prog, plan, shards, self.vector_rows)
+        self._aggregate_stats(prog, plan)
+        return self._assemble(prog, outputs)
+
+    # --------------------------------------------------------- internals
+    def _aggregate_stats(self, prog: TCAPProgram, plan: PhysicalPlan) -> None:
+        agg = self.stats
+        for ws in self.worker_stats:
+            agg.pages_scanned += ws.pages_scanned
+            agg.rows_scanned += ws.rows_scanned
+            agg.rows_joined += ws.rows_joined
+            agg.shuffle_bytes += ws.shuffle_bytes
+        # join counters per plan decision (each worker participates in every
+        # join, so summing worker counters would multiply by N)
+        for op in prog.ops:
+            if op.op == "JOIN":
+                if plan.join_algo.get(id(op), "hash_partition") == "broadcast":
+                    agg.broadcast_joins += 1
+                else:
+                    agg.hash_partition_joins += 1
+
+    def _assemble(self, prog: TCAPProgram,
+                  outputs: List[List]) -> Dict[str, np.ndarray]:
+        out_op = next((op for op in prog.ops if op.op == "OUTPUT"), None)
+        if out_op is None:
+            return {}
+        # rank order == local partition order, so the shared OUTPUT
+        # contract sees batches exactly as the local executor does
+        batches = [decode_batch(block)
+                   for w in range(self.P) for block in outputs[w]]
+        return assemble_output(out_op, batches, self.stats, self.store,
+                               self.write_outputs)
+
+
+@dataclasses.dataclass
+class _Collected:
+    outputs: List[List]
+    stats: List[Optional[ExecStats]]
+
+
+class _ThreadRuntime:
+    """Workers as threads; mailboxes are in-process queues. Worker→worker
+    messages go peer-to-peer; only OUTPUT/stats touch the driver queue."""
+
+    def __init__(self, P: int):
+        self.P = P
+
+    def run(self, prog: TCAPProgram, plan: PhysicalPlan,
+            shards: List[PagedStore], vector_rows: int
+            ) -> Tuple[List[List], List[ExecStats]]:
+        worker_queues = [queue.SimpleQueue() for _ in range(self.P)]
+        driver_queue: "queue.SimpleQueue" = queue.SimpleQueue()
+        threads = []
+        for rank in range(self.P):
+            tr = ThreadTransport(rank, worker_queues, driver_queue)
+            t = threading.Thread(
+                target=worker_main,
+                args=(rank, self.P, tr, shards[rank], vector_rows, prog,
+                      plan),
+                name=f"pc-worker-{rank}", daemon=True)
+            threads.append(t)
+            t.start()
+        try:
+            col = _collect(driver_queue, self.P)
+        except Exception:
+            # unblock peers stuck in recv waiting on the failed worker —
+            # otherwise they'd pin their shard stores for the process
+            # lifetime
+            for q in worker_queues:
+                q.put((DRIVER, ABORT, None))
+            for t in threads:
+                t.join(timeout=10)
+            raise
+        for t in threads:
+            t.join()
+        return col.outputs, [s for s in col.stats if s is not None]
+
+
+class _ProcessRuntime:
+    """Workers as forked processes; the driver routes worker→worker
+    messages over per-worker duplex pipes (a star topology — one recv
+    thread per worker so a blocked forward never stalls draining)."""
+
+    def __init__(self, P: int):
+        self.P = P
+
+    def run(self, prog: TCAPProgram, plan: PhysicalPlan,
+            shards: List[PagedStore], vector_rows: int
+            ) -> Tuple[List[List], List[ExecStats]]:
+        import multiprocessing as mp
+        try:
+            ctx = mp.get_context("fork")
+        except ValueError as e:  # pragma: no cover - non-fork platforms
+            raise RuntimeError(
+                "worker_kind='fork' needs the fork start method (native "
+                "lambdas in TCAP programs cannot be pickled; they ride the "
+                "fork image) — use worker_kind='thread' here") from e
+        pipes = [ctx.Pipe(duplex=True) for _ in range(self.P)]
+        procs = []
+        for rank in range(self.P):
+            # fork inherits prog/plan/shards copy-on-write; the child only
+            # ever touches its own pipe end
+            p = ctx.Process(
+                target=_process_child,
+                args=(rank, self.P, pipes[rank][1], shards[rank],
+                      vector_rows, prog, plan),
+                name=f"pc-worker-{rank}", daemon=True)
+            procs.append(p)
+            p.start()
+            pipes[rank][1].close()  # child's end, in the parent
+
+        conns = [pipes[rank][0] for rank in range(self.P)]
+        driver_queue: "queue.SimpleQueue" = queue.SimpleQueue()
+        # forwarding is decoupled from draining: a pump never blocks in
+        # conns[dst].send (a full destination pipe would stop it draining
+        # its own worker and close a send-cycle once payloads exceed the
+        # OS pipe buffer — a real deadlock at P >= 3); instead it enqueues
+        # to the destination's sender thread, the conn's sole writer.
+        out_queues = [queue.SimpleQueue() for _ in range(self.P)]
+        stop = object()
+
+        def sender(dst: int) -> None:
+            q = out_queues[dst]
+            while True:
+                item = q.get()
+                if item is stop:
+                    return
+                try:
+                    conns[dst].send(item)
+                except (BrokenPipeError, OSError):
+                    return  # dst died; its pump reports the failure
+
+        def pump(src: int) -> None:
+            conn = conns[src]
+            while True:
+                try:
+                    rank, dst, tag, msg = conn.recv()
+                except EOFError:
+                    if tag_done[src]:
+                        return
+                    driver_queue.put((src, "error",
+                                      f"worker {src} died unexpectedly"))
+                    return
+                if dst == DRIVER:
+                    if tag in ("done", "error"):
+                        tag_done[src] = True
+                        driver_queue.put((rank, tag, msg))
+                        if tag == "error":
+                            return
+                    else:
+                        driver_queue.put((rank, tag, msg))
+                else:
+                    out_queues[dst].put((rank, tag, msg))
+
+        tag_done = [False] * self.P
+        senders = [threading.Thread(target=sender, args=(d,), daemon=True)
+                   for d in range(self.P)]
+        pumps = [threading.Thread(target=pump, args=(s,), daemon=True)
+                 for s in range(self.P)]
+        for t in senders + pumps:
+            t.start()
+        try:
+            col = _collect(driver_queue, self.P)
+        except Exception:
+            # same abort the thread runtime broadcasts: peers blocked in
+            # recv unwind immediately instead of stalling into the 30 s
+            # join timeout and a SIGTERM
+            for q in out_queues:
+                q.put((DRIVER, ABORT, None))
+            raise
+        finally:
+            for p in procs:
+                p.join(timeout=30)
+                if p.is_alive():  # pragma: no cover - hung worker
+                    p.terminate()
+            for q in out_queues:
+                q.put(stop)
+        return col.outputs, [s for s in col.stats if s is not None]
+
+
+def _process_child(rank: int, P: int, conn, shard: PagedStore,
+                   vector_rows: int, prog: TCAPProgram,
+                   plan: PhysicalPlan) -> None:  # pragma: no cover - forked
+    tr = ProcessTransport(rank, conn)
+    worker_main(rank, P, tr, shard, vector_rows, prog, plan)
+    conn.close()
+
+
+def _collect(driver_queue: "queue.SimpleQueue", P: int) -> _Collected:
+    """Drain driver-bound messages until every worker reports done."""
+    outputs: List[List] = [[] for _ in range(P)]
+    stats: List[Optional[ExecStats]] = [None] * P
+    remaining = P
+    while remaining:
+        src, tag, msg = driver_queue.get()
+        if tag == "error":
+            raise RuntimeError(f"worker {src} failed:\n{msg}")
+        if tag == "done":
+            stats[src] = msg
+            remaining -= 1
+        else:  # an OUTPUT gather ("<i>:output")
+            outputs[src] = msg
+    return _Collected(outputs, stats)

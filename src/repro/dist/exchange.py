@@ -1,0 +1,157 @@
+"""The exchange layer: transports + the three communication patterns.
+
+Patterns (each operating on page blocks, tagged by TCAP op index so
+concurrent exchanges of one program never interleave):
+
+* :func:`exchange_partitions` — hash-partition shuffle (JOIN sides, one
+  call per side): every worker sends each peer that peer's bucket of
+  sub-batches and keeps its own bucket unserialized (locality is free);
+* :func:`all_gather` — broadcast: every worker replicates its batches to
+  all peers (small-side joins; serialized once, shipped P-1 times);
+* :func:`gather_to` — gather-merge: everyone ships to one root (TOPK's
+  global merge at worker 0, OUTPUT's collect at the driver).
+
+Two transports behind one interface:
+
+* :class:`ThreadTransport` — per-worker in-process mailboxes;
+* :class:`ProcessTransport` — a duplex pipe per forked worker, with the
+  driver routing worker→worker messages (a star; a socket mesh is the
+  drop-in replacement).
+
+Both move the same serialized page blocks, so ``shuffle_bytes`` measures
+identical traffic regardless of the worker kind. ``recv`` buffers by
+(source, tag): the exchange schedule is SPMD-deterministic, but message
+*arrival* order is not.
+"""
+from __future__ import annotations
+
+import queue
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.executor import ExecStats
+from repro.dist.protocol import ABORT, DRIVER, decode_batch, encode_batch
+from repro.objectmodel.vectorlist import VectorList
+
+__all__ = ["PeerAborted", "ThreadTransport", "ProcessTransport",
+           "exchange_partitions", "all_gather", "gather_to"]
+
+
+class PeerAborted(RuntimeError):
+    """Raised inside a worker's ``recv`` when the driver broadcasts ABORT
+    (a peer failed): the worker must stop waiting for messages that will
+    never arrive and unwind."""
+
+
+class ThreadTransport:
+    """In-process transport: one queue per worker plus the driver's."""
+
+    def __init__(self, rank: int, worker_queues: List["queue.SimpleQueue"],
+                 driver_queue: "queue.SimpleQueue"):
+        self.rank = rank
+        self._queues = worker_queues
+        self._driver = driver_queue
+        self._buffer: Dict[Tuple[int, str], deque] = {}
+
+    def send(self, dst: int, tag: str, msg: Any) -> None:
+        q = self._driver if dst == DRIVER else self._queues[dst]
+        q.put((self.rank, tag, msg))
+
+    def recv(self, src: int, tag: str) -> Any:
+        want = (src, tag)
+        buf = self._buffer.get(want)
+        if buf:
+            return buf.popleft()
+        while True:
+            got_src, got_tag, msg = self._queues[self.rank].get()
+            if got_src == DRIVER and got_tag == ABORT:
+                raise PeerAborted("a peer worker failed; aborting")
+            if (got_src, got_tag) == want:
+                return msg
+            self._buffer.setdefault((got_src, got_tag),
+                                    deque()).append(msg)
+
+
+class ProcessTransport:
+    """Forked-worker transport: a duplex pipe to the driver, which routes
+    worker→worker messages (see ``driver._ProcessRuntime``)."""
+
+    def __init__(self, rank: int, conn):
+        self.rank = rank
+        self._conn = conn
+        self._buffer: Dict[Tuple[int, str], deque] = {}
+
+    def send(self, dst: int, tag: str, msg: Any) -> None:
+        self._conn.send((self.rank, dst, tag, msg))
+
+    def recv(self, src: int, tag: str) -> Any:
+        want = (src, tag)
+        buf = self._buffer.get(want)
+        if buf:
+            return buf.popleft()
+        while True:
+            got_src, got_tag, msg = self._conn.recv()
+            if got_src == DRIVER and got_tag == ABORT:
+                raise PeerAborted("a peer worker failed; aborting")
+            if (got_src, got_tag) == want:
+                return msg
+            self._buffer.setdefault((got_src, got_tag),
+                                    deque()).append(msg)
+
+
+# ------------------------------------------------------------- patterns
+def exchange_partitions(tr, P: int, tag: str,
+                        buckets: List[List[VectorList]],
+                        stats: ExecStats) -> List[List[VectorList]]:
+    """Hash-partition shuffle. ``buckets[p]`` is what this worker routed to
+    partition ``p`` (sub-batches in batch order). Returns, per source rank,
+    the sub-batches that landed here — own bucket stays unserialized."""
+    rank = tr.rank
+    for dst in range(P):
+        if dst == rank:
+            continue
+        blocks = [encode_batch(vl) for vl in buckets[dst]]
+        stats.shuffle_bytes += sum(b.nbytes for b in blocks)
+        tr.send(dst, tag, blocks)
+    inbox: List[List[VectorList]] = []
+    for src in range(P):
+        if src == rank:
+            inbox.append(buckets[rank])
+        else:
+            inbox.append([decode_batch(b) for b in tr.recv(src, tag)])
+    return inbox
+
+
+def all_gather(tr, P: int, tag: str, batches: List[VectorList],
+               stats: ExecStats) -> List[List[VectorList]]:
+    """Broadcast: replicate this worker's batches to every peer; returns
+    all workers' batches in rank order (serialize once, ship P-1 times)."""
+    rank = tr.rank
+    blocks = None
+    for dst in range(P):
+        if dst == rank:
+            continue
+        if blocks is None:
+            blocks = [encode_batch(vl) for vl in batches]
+        stats.shuffle_bytes += sum(b.nbytes for b in blocks)
+        tr.send(dst, tag, blocks)
+    return [batches if src == rank else
+            [decode_batch(b) for b in tr.recv(src, tag)]
+            for src in range(P)]
+
+
+def gather_to(tr, P: int, tag: str, root: int,
+              batches: List[VectorList],
+              stats: ExecStats) -> Optional[List[List[VectorList]]]:
+    """Gather-merge: every worker ships its batches to ``root`` (a worker
+    rank, or :data:`DRIVER`). Returns the per-source batch lists at the
+    root, ``None`` elsewhere."""
+    rank = tr.rank
+    if rank != root:
+        blocks = [encode_batch(vl) for vl in batches]
+        stats.shuffle_bytes += sum(b.nbytes for b in blocks)
+        tr.send(root, tag, blocks)
+        return None
+    return [batches if src == rank else
+            [decode_batch(b) for b in tr.recv(src, tag)]
+            for src in range(P)]

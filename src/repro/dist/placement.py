@@ -1,0 +1,49 @@
+"""Partition placement: which pages of which stored sets each worker owns.
+
+Pages are placed round-robin (page ``i`` → worker ``i % N``) — exactly the
+partitioning the local simulated executor applies in ``Executor._scan``, so
+worker ``w``'s shard holds the same pages, in the same order, as local
+partition ``w``. Placement is the *only* thing this module decides; the
+shard build shares the driver's page objects by reference (zero-copy
+in-process, copy-on-write across a fork), honoring the paper's
+zero-cost-movement story: a page is the unit of ownership, never rows.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.tcap import TCAPProgram
+from repro.objectmodel.store import PagedSet, PagedStore
+
+__all__ = ["place_scans", "build_shard_store"]
+
+
+def place_scans(prog: TCAPProgram, store: PagedStore, num_workers: int
+                ) -> Dict[str, List[List[int]]]:
+    """set name -> per-worker list of owned page indices (round-robin)."""
+    placement: Dict[str, List[List[int]]] = {}
+    for op in prog.ops:
+        if op.op != "SCAN":
+            continue
+        name = op.info["set"]
+        if name in placement:
+            continue
+        n_pages = len(store.get_set(name).pages)
+        placement[name] = [[i for i in range(n_pages) if i % num_workers == w]
+                           for w in range(num_workers)]
+    return placement
+
+
+def build_shard_store(store: PagedStore,
+                      placement: Dict[str, List[List[int]]],
+                      rank: int) -> PagedStore:
+    """Worker ``rank``'s own PagedStore: one shard PagedSet per scanned set,
+    holding (references to) the worker's pages only."""
+    shard = PagedStore(page_size=store.page_size)
+    for name, per_worker in placement.items():
+        src = store.get_set(name)
+        s = PagedSet(name, src.dtype, src.page_size)
+        s.pages = [src.pages[i] for i in per_worker[rank]]
+        s.counts = [src.counts[i] for i in per_worker[rank]]
+        shard.sets[name] = s
+    return shard

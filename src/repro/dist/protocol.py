@@ -1,0 +1,103 @@
+"""Wire protocol for the exchange layer: page blocks.
+
+A batch (vector list) crossing a worker boundary is packed into a
+structured-dtype record array, paged through a throwaway
+:class:`~repro.objectmodel.store.PagedSet`, and shipped as that set's raw
+page payloads — the serialized form *is* the page byte format, so the
+receiver adopts the bytes (:meth:`PagedSet.from_payloads`) and takes typed
+views; no parsing happens on either end. ``nbytes`` is the real payload
+traffic, which is what per-worker ``ExecStats.shuffle_bytes`` accounts.
+
+Columns whose dtype numpy cannot pack (``object``) fall back to a pickled
+block — still measured, but outside the zero-copy claim; the relational
+benchmarks never hit this path.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.relops import AggMap
+from repro.objectmodel.page import DEFAULT_PAGE_SIZE
+from repro.objectmodel.store import PagedSet
+from repro.objectmodel.vectorlist import VectorList
+
+__all__ = ["ABORT", "DRIVER", "PageBlock", "PickleBlock", "encode_batch",
+           "decode_batch", "encode_agg_map", "decode_agg_map"]
+
+DRIVER = -1  # transport address of the driver
+ABORT = "__abort__"  # driver -> workers: a peer failed, stop waiting
+
+
+class PageBlock:
+    """A batch as raw page payloads + the dtype needed to view them."""
+
+    __slots__ = ("descr", "payloads", "names")
+
+    def __init__(self, descr, payloads: List[Tuple[int, np.ndarray]],
+                 names: Tuple[str, ...]):
+        self.descr = descr          # np.dtype(...).descr round-trip
+        self.payloads = payloads    # [(record_count, payload_bytes), ...]
+        self.names = names          # column order (== field order)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(raw.nbytes for _, raw in self.payloads)
+
+
+class PickleBlock:
+    """Fallback for object-dtype columns (no page representation)."""
+
+    __slots__ = ("data", "nbytes")
+
+    def __init__(self, columns: Dict[str, np.ndarray]):
+        self.data = pickle.dumps(columns, protocol=pickle.HIGHEST_PROTOCOL)
+        self.nbytes = len(self.data)
+
+
+def encode_batch(vl: VectorList) -> "PageBlock | PickleBlock":
+    cols = {n: np.asarray(vl[n]) for n in vl.names}
+    if any(c.dtype == object for c in cols.values()):
+        return PickleBlock(cols)
+    dtype = np.dtype([(n, c.dtype, c.shape[1:]) for n, c in cols.items()])
+    n = vl.num_rows or 0
+    rec = np.empty(n, dtype)
+    for name, c in cols.items():
+        rec[name] = c
+    # a single oversized record must still fit one page
+    page_size = max(DEFAULT_PAGE_SIZE, dtype.itemsize + 8)
+    wire = PagedSet("wire", dtype, page_size)
+    wire.append_records(rec)
+    return PageBlock(dtype.descr, wire.to_payloads(), tuple(cols))
+
+
+def decode_batch(block: "PageBlock | PickleBlock") -> VectorList:
+    if isinstance(block, PickleBlock):
+        return VectorList(pickle.loads(block.data))
+    dtype = np.dtype(block.descr)
+    recs = PagedSet.from_payloads("wire", dtype, block.payloads).all_records()
+    return VectorList({n: recs[n] for n in block.names})
+
+
+# --------------------------------------------------- AGG partial transfer
+def encode_agg_map(m: AggMap) -> Optional["PageBlock | PickleBlock"]:
+    """A pre-aggregation partial as a {key, value} page block (``None``
+    when empty — empty partials never hit the wire)."""
+    if not m.data:
+        return None
+    keys = np.array(list(m.data.keys()))
+    vals = np.stack([np.asarray(v) for v in m.data.values()])
+    return encode_batch(VectorList({"key": keys, "value": vals}))
+
+
+def decode_agg_map(block, combiner: str) -> AggMap:
+    vl = decode_batch(block)
+    m = AggMap(combiner)
+    vals = vl["value"]
+    # .tolist() restores native python keys so hashing and dict identity
+    # match the sender's map exactly
+    for i, k in enumerate(np.asarray(vl["key"]).tolist()):
+        m.data[k] = vals[i]
+    return m

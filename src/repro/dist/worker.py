@@ -1,0 +1,190 @@
+"""The worker runtime: SPMD execution of one TCAP program over one shard.
+
+Every worker runs the *same* op sequence (the paper's staged plan), calling
+the same per-partition kernels as the local simulated executor
+(:mod:`repro.core.relops`) over its own :class:`~repro.objectmodel.store
+.PagedStore` shard, and hitting the exchange layer at the ops the physical
+plan stages across workers:
+
+* JOIN — ``all_gather`` of the build side (broadcast) or
+  ``exchange_partitions`` of both sides (hash-partition shuffle);
+* AGG — pre-aggregate locally, ``exchange_partitions`` of the partial maps
+  by key hash, final merge;
+* TOPK — local per-batch top-k, ``gather_to`` worker 0, global merge there;
+* OUTPUT — ``gather_to`` the driver.
+
+Because placement is the same round-robin the local executor simulates and
+exchanges preserve (source rank, batch) order, results are byte-identical
+to ``Executor`` with ``num_partitions == num_workers`` — enforced by
+``tests/test_dist.py``.
+"""
+from __future__ import annotations
+
+import traceback
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.executor import ExecStats
+from repro.core.physical import PhysicalPlan
+from repro.core.relops import (AggMap, batch_kernel, batch_topk,
+                               concat_batches, merge_topk, probe_join,
+                               split_by_hash)
+from repro.core.tcap import TCAPOp, TCAPProgram
+from repro.dist.exchange import (PeerAborted, all_gather,
+                                 exchange_partitions, gather_to)
+from repro.dist.protocol import DRIVER, decode_agg_map, encode_agg_map
+from repro.objectmodel.store import PagedStore
+from repro.objectmodel.vectorlist import VectorList
+
+__all__ = ["WorkerRuntime", "worker_main"]
+
+
+class WorkerRuntime:
+    """One worker: a rank, its shard store, and a transport to its peers."""
+
+    def __init__(self, rank: int, num_workers: int, transport,
+                 shard: PagedStore, vector_rows: int = 8192):
+        self.rank = rank
+        self.P = num_workers
+        self.tr = transport
+        self.store = shard
+        self.vector_rows = vector_rows
+        self.stats = ExecStats()
+
+    # ------------------------------------------------------------ driver
+    def run(self, prog: TCAPProgram, plan: PhysicalPlan) -> None:
+        """Execute the program; OUTPUT batches stream to the driver."""
+        self.stats = ExecStats()
+        data: Dict[str, List[VectorList]] = {}
+        for i, op in enumerate(prog.ops):
+            if op.op == "SCAN":
+                data[op.out] = self._scan(op)
+            elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
+                kern = batch_kernel(op)
+                data[op.out] = [kern(vl) for vl in data[op.in_list]]
+            elif op.op == "JOIN":
+                algo = plan.join_algo.get(id(op), "hash_partition")
+                data[op.out] = self._join(op, i, data[op.in_list],
+                                          data[op.in_list2], algo)
+            elif op.op == "AGG":
+                data[op.out] = self._aggregate(op, i, data[op.in_list])
+            elif op.op == "TOPK":
+                data[op.out] = self._topk(op, i, data[op.in_list])
+            elif op.op == "OUTPUT":
+                self._output(op, i, data[op.in_list])
+            else:
+                raise ValueError(f"unknown op {op.op}")
+
+    # --------------------------------------------------------------- ops
+    def _scan(self, op: TCAPOp) -> List[VectorList]:
+        s = self.store.get_set(op.info["set"])
+        col = op.out_cols[0]
+        batches: List[VectorList] = []
+        for page_records in s.scan():
+            self.stats.pages_scanned += 1
+            self.stats.rows_scanned += len(page_records)
+            for j in range(0, len(page_records), self.vector_rows):
+                batches.append(
+                    VectorList({col: page_records[j: j + self.vector_rows]}))
+        return batches
+
+    def _join(self, op: TCAPOp, i: int, left: List[VectorList],
+              right: List[VectorList], algo: str) -> List[VectorList]:
+        if algo == "broadcast":
+            self.stats.broadcast_joins += 1
+            srcs = all_gather(self.tr, self.P, f"{i}:build", right,
+                              self.stats)
+            rvl = concat_batches([vl for src in srcs for vl in src])
+            lvl = concat_batches(left)
+        else:
+            self.stats.hash_partition_joins += 1
+            lvl = self._shuffle_side(op.apply_cols[0], f"{i}:L", left)
+            rvl = self._shuffle_side(op.apply_cols2[0], f"{i}:R", right)
+        probed = probe_join(op, lvl, rvl)
+        if probed is None:
+            return []
+        res, n = probed
+        self.stats.rows_joined += n
+        return [res]
+
+    def _shuffle_side(self, hash_name: str, tag: str,
+                      batches: List[VectorList]) -> VectorList:
+        buckets: List[List[VectorList]] = [[] for _ in range(self.P)]
+        for vl in batches:
+            for p, sub in enumerate(split_by_hash(vl, hash_name, self.P)):
+                if sub is not None:
+                    buckets[p].append(sub)
+        inbox = exchange_partitions(self.tr, self.P, tag, buckets,
+                                    self.stats)
+        return concat_batches([vl for src in inbox for vl in src])
+
+    def _aggregate(self, op: TCAPOp, i: int,
+                   batches: List[VectorList]) -> List[VectorList]:
+        kcol, vcol = op.apply_cols
+        combiner = op.info.get("combiner", "sum")
+        m = AggMap(combiner)
+        for vl in batches:
+            m.absorb(np.asarray(vl[kcol]), np.asarray(vl[vcol]))
+        split = m.split_by_key_hash(self.P)
+        tag = f"{i}:partials"
+        # partial maps ride the same page-block wire as batches
+        for dst in range(self.P):
+            if dst == self.rank:
+                continue
+            block = encode_agg_map(split[dst])
+            if block is not None:
+                self.stats.shuffle_bytes += block.nbytes
+            self.tr.send(dst, tag, block)
+        final = AggMap(combiner)
+        for src in range(self.P):
+            if src == self.rank:
+                part = split[self.rank]
+            else:
+                block = self.tr.recv(src, tag)
+                part = (decode_agg_map(block, combiner)
+                        if block is not None else None)
+            if part is not None and part.data:
+                final.merge(part)
+        emitted = final.emit()
+        return [emitted] if emitted is not None else []
+
+    def _topk(self, op: TCAPOp, i: int,
+              batches: List[VectorList]) -> List[VectorList]:
+        best_s: List[np.ndarray] = []
+        best_p: List[np.ndarray] = []
+        for vl in batches:
+            s, pay = batch_topk(op, vl)
+            best_s.append(s)
+            best_p.append(pay)
+        local = ([VectorList({"score": np.concatenate(best_s),
+                              "payload": np.concatenate(best_p)})]
+                 if best_s else [])
+        gathered = gather_to(self.tr, self.P, f"{i}:topk", 0, local,
+                             self.stats)
+        if gathered is None:  # not the merge root
+            return []
+        cand_s = [np.asarray(vl["score"]) for src in gathered for vl in src]
+        cand_p = [np.asarray(vl["payload"]) for src in gathered for vl in src]
+        merged = merge_topk(op, cand_s, cand_p)
+        return [merged] if merged is not None else []
+
+    def _output(self, op: TCAPOp, i: int, batches: List[VectorList]) -> None:
+        out = [vl.project(op.apply_cols) for vl in batches]
+        self.stats.rows_output = sum(vl.num_rows or 0 for vl in out)
+        gather_to(self.tr, self.P, f"{i}:output", DRIVER, out, self.stats)
+
+
+def worker_main(rank: int, num_workers: int, transport, shard: PagedStore,
+                vector_rows: int, prog: TCAPProgram,
+                plan: PhysicalPlan) -> None:
+    """Entry point for both worker kinds: run, then report stats (or the
+    failure) to the driver."""
+    rt = WorkerRuntime(rank, num_workers, transport, shard, vector_rows)
+    try:
+        rt.run(prog, plan)
+        transport.send(DRIVER, "done", rt.stats)
+    except PeerAborted:
+        pass  # the driver raised already; nothing left to report
+    except BaseException:
+        transport.send(DRIVER, "error", traceback.format_exc())

@@ -162,9 +162,15 @@ class Page:
     def from_payload(cls, page_id: int, payload: np.ndarray, size: int,
                      policy: AllocPolicy = AllocPolicy.LIGHTWEIGHT_REUSE) -> "Page":
         """Reconstruct a page at a receiving 'process' — no deserialization,
-        the payload bytes are adopted as-is and offsets remain valid."""
-        buf = np.zeros(size, dtype=np.uint8)
-        buf[: payload.nbytes] = payload.view(np.uint8)
+        the payload bytes are adopted as-is and offsets remain valid. When
+        the payload already spans the full page (the wire-transfer case),
+        its buffer is adopted without even a copy."""
+        payload = payload.view(np.uint8)
+        if payload.nbytes == size and payload.flags["C_CONTIGUOUS"]:
+            buf = payload
+        else:
+            buf = np.zeros(size, dtype=np.uint8)
+            buf[: payload.nbytes] = payload
         p = cls(page_id, size, policy, buf=buf)
         p._bump = int(payload.nbytes)
         return p

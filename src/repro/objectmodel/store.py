@@ -60,6 +60,29 @@ class PagedSet:
             return np.empty(0, dtype=self.dtype)
         return np.concatenate(chunks)
 
+    # ----------------------------------------------------- wire movement
+    def to_payloads(self) -> List[Tuple[int, np.ndarray]]:
+        """Spill-to-memory: each page's occupied prefix verbatim, as
+        ``(record_count, payload_bytes)`` pairs. This *is* the wire format
+        of the distributed exchange layer — the same byte dump
+        :meth:`PagedStore.spill` writes to disk, minus the filesystem."""
+        return [(cnt, page.payload())
+                for page, cnt in zip(self.pages, self.counts)]
+
+    @classmethod
+    def from_payloads(cls, name: str, dtype: np.dtype,
+                      payloads: Sequence[Tuple[int, np.ndarray]],
+                      page_size: int = DEFAULT_PAGE_SIZE) -> "PagedSet":
+        """Restore-from-memory: adopt received page bytes with no parsing
+        (the counterpart of :meth:`PagedStore.restore` for wire transfers).
+        Each payload buffer is adopted in place — offsets stay valid."""
+        s = cls(name, dtype, page_size)
+        for i, (cnt, raw) in enumerate(payloads):
+            s.pages.append(Page.from_payload(i, raw, raw.nbytes,
+                                             AllocPolicy.NO_REUSE))
+            s.counts.append(cnt)
+        return s
+
 
 class PagedStore:
     """Named sets + spill-to-disk. Directory layout: <root>/<set>/<page>.bin"""

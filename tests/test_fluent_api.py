@@ -185,14 +185,55 @@ def test_repeated_collect_hits_plan_cache():
     sess = Session(store=store)
     ds = _fluent_agg(sess)
     r1 = ds.collect()
-    assert sess.plan_cache_info() == {"hits": 0, "misses": 1, "entries": 1}
+    assert sess.plan_cache_info() == {"hits": 0, "misses": 1, "entries": 1,
+                                      "evictions": 0, "capacity": 64}
     r2 = ds.collect()
-    assert sess.plan_cache_info() == {"hits": 1, "misses": 1, "entries": 1}
+    assert sess.plan_cache_info() == {"hits": 1, "misses": 1, "entries": 1,
+                                      "evictions": 0, "capacity": 64}
     assert np.array_equal(np.sort(r1["key"]), np.sort(r2["key"]))
     # an identically-shaped second handle also hits (shared lambdas)
     r3 = _fluent_agg(sess).collect()
     assert sess.cache_hits == 2
     assert np.array_equal(np.sort(r1["key"]), np.sort(r3["key"]))
+
+
+def test_plan_cache_lru_bound_evicts_oldest():
+    store, _, _ = _store()
+    sess = Session(store=store, plan_cache_size=2)
+    # three structurally distinct queries (distinct native lambdas force
+    # distinct strict signatures)
+    queries = [
+        sess.read("emps", "Emp").aggregate(
+            key="dept", value=lambda x, m=m: make_lambda(
+                x, lambda r, m=m: r["salary"] * m, f"x{m}"))
+        for m in (2, 3, 4)
+    ]
+    for q in queries:
+        q.collect()
+    info = sess.plan_cache_info()
+    assert info == {"hits": 0, "misses": 3, "entries": 2, "evictions": 1,
+                    "capacity": 2}
+    # oldest (queries[0]) was evicted: re-running it misses and evicts
+    # queries[1]; the most recent (queries[2]) still hits
+    queries[0].collect()
+    assert sess.cache_misses == 4 and sess.cache_evictions == 2
+    queries[2].collect()
+    assert sess.cache_hits == 1
+
+
+def test_col_accessor_reaches_shadowed_columns():
+    dt = np.dtype([("name", "S8"), ("slot", np.int64)])
+    recs = np.zeros(6, dt)
+    recs["name"] = [f"n{i}".encode() for i in range(6)]
+    recs["slot"] = np.arange(6)
+    sess = Session()
+    ds = sess.load("shadowed", recs, type_name="Shadowed")
+    # e.slot would hit the real LambdaArg attribute (an int) — e.col("slot")
+    # is the escape hatch
+    r = (ds.filter(lambda e: e.col("slot") >= 3)
+           .select(lambda e: e.col("name"))
+           .to_numpy())
+    assert np.array_equal(np.sort(r), np.sort(recs["name"][recs["slot"] >= 3]))
 
 
 def test_inline_native_lambdas_do_not_false_hit():

@@ -79,10 +79,19 @@ def test_kmeans_on_declarative_engine_converges():
 
 
 def test_training_deterministic_and_converging():
-    a = train_loop("xlstm_125m", steps=10, batch=4, seq=32, log_every=100)
-    b = train_loop("xlstm_125m", steps=10, batch=4, seq=32, log_every=100)
+    # warmup_cosine gives step 0 lr=0 (warmup = max(1, steps//20)), so the
+    # first step is a no-op update: convergence must be judged from the
+    # first post-warmup step, and over enough steps for the signal to beat
+    # per-batch noise (10 steps at the default lr showed none).
+    steps, lr = 30, 1e-3
+    warmup = max(1, steps // 20)
+    a = train_loop("xlstm_125m", steps=steps, batch=4, seq=32, lr=lr,
+                   log_every=100)
+    b = train_loop("xlstm_125m", steps=steps, batch=4, seq=32, lr=lr,
+                   log_every=100)
     np.testing.assert_allclose(a["losses"], b["losses"], rtol=1e-5)
-    assert a["losses"][-1] < a["losses"][0]
+    post_warmup = a["losses"][warmup]
+    assert np.mean(a["losses"][-5:]) < post_warmup - 0.3, a["losses"]
 
 
 def test_serving_engine_continuous_batching_and_page_recycling():

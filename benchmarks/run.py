@@ -7,6 +7,8 @@
   §8.4/T8  -> bench_objectmodel  (zero-copy movement)
   kernels  -> bench_kernels      (flash vs materialized attention)
   api      -> bench_api          (fluent front-end overhead vs raw executor)
+  expr     -> bench_expr         (interpreted vs fused-numpy vs jitted-jax
+                                  lambda stages; kernel-LRU hit counters)
   dist     -> bench_dist         (workers backend vs local sim; real
                                   page-serialized shuffle bytes vs N)
   §Roofline -> roofline          (from dry-run artifacts, if present)
@@ -18,9 +20,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_api, bench_dist, bench_kernels,
-                            bench_linalg, bench_ml, bench_oo,
-                            bench_objectmodel)
+    from benchmarks import (bench_api, bench_dist, bench_expr,
+                            bench_kernels, bench_linalg, bench_ml,
+                            bench_oo, bench_objectmodel)
     suites = [
         ("linalg", bench_linalg.run),
         ("oo", bench_oo.run),
@@ -28,6 +30,7 @@ def main() -> None:
         ("objectmodel", bench_objectmodel.run),
         ("kernels", bench_kernels.run),
         ("api", bench_api.run),
+        ("expr", bench_expr.run),
         ("dist", bench_dist.run),
     ]
     print("name,us_per_call,derived")

@@ -1,9 +1,11 @@
-"""Quickstart: the two faces of the platform in ~70 lines.
+"""Quickstart: the two faces of the platform in ~80 lines.
 
-1. *Declarative in the large* — a fluent, lazy Dataset chain: state WHAT to
-   compute; the Session compiles it to TCAP, optimizes with the rule
-   engine, plans physically, and executes vectorized. Repeated queries hit
-   the session's plan cache and skip recompilation.
+1. *Declarative in the large* — a typed, fluent, lazy Dataset chain: a
+   ``Record`` schema declares the packed layout, the Session compiles the
+   chain to TCAP, optimizes with the rule engine, lowers the lambda stages
+   into fused kernels (``expr_backend="numpy"`` by default, ``"jax"`` for
+   jitted stages), plans physically, and executes vectorized. Repeated
+   queries hit the plan cache and reuse the compiled kernels.
 2. *High-performance in the small* — the same pages move zero-copy, and a
    model forward runs through the planner-sharded JAX engine.
 
@@ -11,26 +13,31 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import Session, make_lambda_from_method, register_method
+from repro.core import Session, UnknownColumnError
 from repro.objectmodel import PagedStore
+from repro.objectmodel.schema import Record, S, i64
 
-# --- data: packed Employee records on pages (the PC object model) --------
-EMP = np.dtype([("name", "S12"), ("dept", "S8"), ("salary", np.int64)])
+# --- data: a typed schema compiled to packed Employee records ------------
+class Employee(Record):
+    name: S(12)      # "name" shadows a LambdaArg attribute — typed schemas
+    dept: S(8)       # resolve it as a column anyway (no col() needed)
+    salary: i64
+
+
 rng = np.random.default_rng(0)
-emps = np.zeros(10_000, EMP)
-emps["name"] = [f"emp{i}".encode() for i in range(len(emps))]
-emps["dept"] = rng.choice([b"sales", b"eng", b"hr"], len(emps))
-emps["salary"] = rng.integers(30_000, 150_000, len(emps))
+emps = Employee.pack(
+    name=[f"emp{i}".encode() for i in range(10_000)],
+    dept=rng.choice([b"sales", b"eng", b"hr"], 10_000),
+    salary=rng.integers(30_000, 150_000, 10_000))
 
-# --- a "method" registered with the catalog (the .so shipping analogue) --
-register_method("Employee", "getSalary")(lambda rows: rows["salary"])
-
-# --- the fluent front-end: one declarative chain -------------------------
-# Note getSalary is invoked twice — the optimizer's CSE removes one.
-sess = Session(num_partitions=4)
-payroll = (sess.load("employees", emps, type_name="Employee")
-           .filter(lambda e: make_lambda_from_method(e, "getSalary") > 60_000)
-           .filter(lambda e: make_lambda_from_method(e, "getSalary") < 140_000)
+# --- the typed fluent front-end: one declarative chain -------------------
+# Note salary is read twice — the optimizer's CSE removes one access, and
+# the whole filter/filter/key/value run fuses into one compiled stage.
+sess = Session(num_partitions=4)  # expr_backend="numpy" is the default
+employees = sess.load("employees", emps, Employee)  # layout validated
+payroll = (employees
+           .filter(lambda e: e.salary > 60_000)
+           .filter(lambda e: e.salary < 140_000)
            .aggregate(key="dept", value="salary"))
 
 result = payroll.collect()
@@ -40,8 +47,25 @@ print(f"TCAP optimized: CSE removed {rep.cse_removed}, "
 for dept, total in zip(result["key"], result["value"]):
     print(f"  {dept.decode():5s}: {int(total):>12,}")
 
-payroll.collect()  # same handle again: optimized plan comes from the cache
+payroll.collect()  # same handle again: plan + compiled kernels from cache
 print(f"plan cache after re-run: {sess.plan_cache_info()}")
+
+# typos fail at graph-build time, naming the schema's fields:
+try:
+    employees.filter(lambda e: e.salry > 0)
+except UnknownColumnError as e:
+    print(f"build-time schema check: {e}")
+
+# the same chain under the jitted backend — byte-identical results
+jsess = Session(num_partitions=4, expr_backend="jax")
+jres = (jsess.load("employees", emps, Employee)
+        .filter(lambda e: e.salary > 60_000)
+        .filter(lambda e: e.salary < 140_000)
+        .aggregate(key="dept", value="salary")
+        .collect())
+assert np.asarray(jres["value"]).tobytes() == \
+    np.asarray(result["value"]).tobytes()
+print("jax expr backend: byte-identical aggregate")
 
 # explain() renders the optimized TCAP + physical plan without executing
 print("\n" + "\n".join(payroll.explain().splitlines()[-4:]))
@@ -56,8 +80,7 @@ from repro.core import (AggregateComp, Executor, ScanSet, SelectionComp,
 
 class HighEarners(SelectionComp):
     def get_selection(self, emp):
-        return ((make_lambda_from_method(emp, "getSalary") > 60_000)
-                & (make_lambda_from_method(emp, "getSalary") < 140_000))
+        return (emp.salary > 60_000) & (emp.salary < 140_000)
 
     def get_projection(self, emp):
         return make_lambda_from_self(emp)
@@ -74,7 +97,8 @@ class PayrollByDept(AggregateComp):
 store = PagedStore()
 store.send_data("employees", emps)
 agg = PayrollByDept()
-agg.set_input(HighEarners().set_input(ScanSet("db", "employees", "Employee")))
+# ScanSet takes the schema class too — typed args flow to get_selection
+agg.set_input(HighEarners().set_input(ScanSet("db", "employees", Employee)))
 writer = WriteSet("db", "payroll")
 writer.set_input(agg)
 hand = Executor(store, num_partitions=4).execute(writer)

@@ -18,13 +18,19 @@ import numpy as np
 from repro.core import (Executor, Session, make_lambda,
                         make_lambda_from_member)
 from repro.objectmodel import PagedStore
+from repro.objectmodel.schema import f64, i64, record, vector
 
-__all__ = ["BlockMatrix", "LinAlgSession"]
+__all__ = ["BlockMatrix", "LinAlgSession", "matrix_block_schema"]
+
+
+def matrix_block_schema(bs: int) -> type:
+    """The MatrixBlock record schema for one block size (paper §8.3)."""
+    return record(f"MatrixBlock{bs}", r=i64, c=i64,
+                  data=vector(f64, (bs, bs)))
 
 
 def _block_dtype(bs: int) -> np.dtype:
-    return np.dtype([("r", np.int64), ("c", np.int64),
-                     ("data", np.float64, (bs, bs))])
+    return matrix_block_schema(bs).dtype
 
 
 def _flatten_data(rows):
@@ -126,8 +132,9 @@ class LinAlgSession:
         out_att = "c" if ta else "r"
         mul = _block_mul_fn(ta, out_att, bs)
 
-        a_ds = self.sess.read(A.set_name, f"Blk_{A.set_name}")
-        b_ds = self.sess.read(B.set_name, f"Blk_{B.set_name}")
+        schema = matrix_block_schema(bs)
+        a_ds = self.sess.read(A.set_name, schema)
+        b_ds = self.sess.read(B.set_name, schema)
         r = (a_ds.join(
                 b_ds,
                 on=lambda a, b: (make_lambda_from_member(a, inner_att)
@@ -167,17 +174,15 @@ class LinAlgSession:
                          xq: np.ndarray, k: int = 1):
         """argmin_i (x_i - x')^T A (x_i - x') via top_k (paper §8.3)."""
         dim = X.cols
-        row_dt = np.dtype([("idx", np.int64), ("x", np.float64, (dim,))])
+        row_schema = record(f"NNRow{dim}", idx=i64, x=vector(f64, dim))
         dense = self.fetch(X)
-        recs = np.zeros(len(dense), row_dt)
-        recs["idx"] = np.arange(len(dense))
-        recs["x"] = dense
+        recs = row_schema.pack(idx=np.arange(len(dense)), x=dense)
 
         def score(rows):
             d = rows["x"] - xq
             return -np.einsum("nd,df,nf->n", d, Am, d)
 
-        r = (self.sess.load("rows", recs, type_name="Row")
+        r = (self.sess.load("rows", recs, row_schema)
                  .top_k(k, score=lambda a: make_lambda(a, score,
                                                        "negMahalanobis"),
                         payload="idx")

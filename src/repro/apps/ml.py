@@ -18,15 +18,23 @@ import numpy as np
 from repro.core import (AggregateComp, Executor, ScanSet, Session, WriteSet,
                         make_lambda, make_lambda_from_member)
 from repro.objectmodel import PagedStore
+from repro.objectmodel.schema import f64, i64, record, vector
 
-__all__ = ["KMeans", "GMM", "LDAGibbs"]
+__all__ = ["KMeans", "GMM", "LDAGibbs", "point_schema", "LDATriple"]
+
+
+def point_schema(dim: int) -> type:
+    """The per-dimension DataPoint schema (one f64 vector per record)."""
+    return record(f"DataPoint{dim}", x=vector(f64, dim))
+
+
+# matches repro.data.synthetic.lda_triples — (doc, word, count) per record
+LDATriple = record("LDATriple", doc=i64, word=i64, count=i64)
 
 
 def _points_to_store(store: PagedStore, x: np.ndarray,
                      session: Session) -> str:
-    dt = np.dtype([("x", np.float64, (x.shape[1],))])
-    rec = np.zeros(len(x), dt)
-    rec["x"] = x
+    rec = point_schema(x.shape[1]).pack(x=x)
     name = session.fresh_set_name("pts")
     store.send_data(name, rec)
     return name
@@ -95,7 +103,7 @@ class KMeans:
                     return make_lambda(arg, from_me, "fromMe")
 
             agg = GetNewCentroids(scope=sess.scope)
-            agg.set_input(ScanSet("db", sname, "DataPoint",
+            agg.set_input(ScanSet("db", sname, point_schema(dim),
                                   scope=sess.scope))
             w = WriteSet("db", sess.fresh_set_name("cent"),
                          scope=sess.scope)
@@ -166,7 +174,7 @@ class GMM:
                     return make_lambda(arg, stats, "suffStats")
 
             agg = EStep(scope=sess.scope)
-            agg.set_input(ScanSet("db", sname, "DataPoint",
+            agg.set_input(ScanSet("db", sname, point_schema(d),
                                   scope=sess.scope))
             w = WriteSet("db", sess.fresh_set_name("gmm"),
                          scope=sess.scope)
@@ -205,7 +213,7 @@ class LDAGibbs:
         sess = _tool_session(self.P, self.session)
         store = sess.store
         name = sess.fresh_set_name("triples")
-        store.send_data(name, triples)
+        store.send_data(name, LDATriple.validate(triples))
         ex = Executor(store, num_partitions=self.P,
                       do_optimize=self.do_optimize)
         T, V = self.T, self.V
@@ -240,7 +248,7 @@ class LDAGibbs:
                     return make_lambda(arg, sample, "sampleTopics")
 
             agg = SampleAgg(scope=sess.scope)
-            agg.set_input(ScanSet("db", name, "Triple", scope=sess.scope))
+            agg.set_input(ScanSet("db", name, LDATriple, scope=sess.scope))
             w = WriteSet("db", sess.fresh_set_name("lda"),
                          scope=sess.scope)
             w.set_input(agg)
@@ -271,7 +279,7 @@ class LDAGibbs:
                     return make_lambda(arg, sample, "sampleTopics")
 
             agg2 = WordAgg(scope=sess.scope)
-            agg2.set_input(ScanSet("db", name, "Triple", scope=sess.scope))
+            agg2.set_input(ScanSet("db", name, LDATriple, scope=sess.scope))
             w2 = WriteSet("db", sess.fresh_set_name("ldaw"),
                           scope=sess.scope)
             w2.set_input(agg2)

@@ -1,14 +1,18 @@
 """The paper's big-object analytics (§8.4) over denormalized TPC-H,
-written against the fluent :class:`~repro.core.session.Session` API:
+written against the fluent :class:`~repro.core.session.Session` API with
+typed record schemas (:class:`Customer` / :class:`Lineitem`):
 
 * customers-per-supplier — for each supplier, the map customer -> parts
   sold (one two-stage aggregation);
 * top-k Jaccard — customers whose purchased-part set is most similar to a
   query set (the TopJaccard pattern): an aggregation phase materialized via
-  ``write()``, then a ``top_k`` over the per-customer sets.
+  ``write()``, then a ``top_k`` over the per-customer sets (typed through a
+  dynamically synthesized per-width schema, :func:`custset_schema`).
 
-Set naming is session-scoped (no module-global counters), so concurrent
-sessions in one process cannot collide on store set names.
+Loading validates record layout against the schema and column references
+are checked at graph-build time. Set naming is session-scoped (no
+module-global counters), so concurrent sessions in one process cannot
+collide on store set names.
 """
 from __future__ import annotations
 
@@ -17,8 +21,35 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import Executor, Session, make_lambda
+from repro.objectmodel.schema import (Record, S, f64, i32, i64, record,
+                                      vector)
 
-__all__ = ["customers_per_supplier", "topk_jaccard", "load_tpch"]
+__all__ = ["Customer", "Lineitem", "custset_schema",
+           "customers_per_supplier", "topk_jaccard", "load_tpch"]
+
+
+class Customer(Record):
+    """Denormalized TPC-H customer (matches ``data.synthetic`` layout)."""
+    custkey: i64
+    name: S(16)
+    n_orders: i32
+
+
+class Lineitem(Record):
+    """Flattened lineitem of the denormalized nested objects (§8.4)."""
+    custkey: i64
+    orderkey: i64
+    suppkey: i64
+    partkey: i64
+    qty: i32
+    price: f64
+
+
+def custset_schema(n_parts: int) -> type:
+    """The per-customer part-presence schema of the materialized
+    aggregation phase (one presence slot per part; float64 because the
+    max-combiner accumulates in float64)."""
+    return record(f"CustSet{n_parts}", key=i64, value=vector(f64, n_parts))
 
 
 def _session_for(store, num_partitions, executor_cls,
@@ -48,9 +79,11 @@ def _session_for(store, num_partitions, executor_cls,
 def load_tpch(store, customers: np.ndarray,
               lineitems: np.ndarray, session: Optional[Session] = None
               ) -> Tuple[str, str]:
+    """Load packed TPC-H records as typed sets (layouts validated against
+    the :class:`Customer` / :class:`Lineitem` schemas)."""
     sess = _session_for(store, None, None, session)
-    cds = sess.load("customers", customers, type_name="Customer")
-    lds = sess.load("lineitems", lineitems, type_name="Lineitem")
+    cds = sess.load("customers", customers, Customer)
+    lds = sess.load("lineitems", lineitems, Lineitem)
     return cds.set_name, lds.set_name
 
 
@@ -76,7 +109,7 @@ def customers_per_supplier(store, lineitems_set: str,
     One two-stage aggregation keyed by (supplier, customer); values are
     per-part presence vectors combined with max (set union)."""
     sess = _session_for(store, num_partitions, executor_cls, session)
-    r = (sess.read(lineitems_set, "Lineitem")
+    r = (sess.read(lineitems_set, Lineitem)
              .aggregate(
                  key=lambda a: make_lambda(a, _supp_cust_key, "suppCust"),
                  value=lambda a: make_lambda(a, _part_presence(n_parts),
@@ -100,7 +133,7 @@ def topk_jaccard(store, lineitems_set: str, n_parts: int,
     sess = _session_for(store, num_partitions, executor_cls, session)
 
     custsets = sess.fresh_set_name("custsets")
-    (sess.read(lineitems_set, "Lineitem")
+    (sess.read(lineitems_set, Lineitem)
          .aggregate(key="custkey",
                     value=lambda a: make_lambda(a, _part_presence(n_parts),
                                                 "partSet"),
@@ -117,7 +150,7 @@ def topk_jaccard(store, lineitems_set: str, n_parts: int,
         union = (parts | qvec).sum(1)
         return inter / np.maximum(union, 1)
 
-    r = (sess.read(custsets, "CustSet")
+    r = (sess.read(custsets, custset_schema(n_parts))
              .top_k(k, score=lambda a: make_lambda(a, jaccard, "jaccard"),
                     payload="key")
              .collect())

@@ -8,11 +8,14 @@
   training/serving side.
 """
 from repro.core.naming import NameScope, default_scope
-from repro.core.lambdas import (LambdaArg, LambdaTerm, constant, make_lambda,
+from repro.core.lambdas import (LambdaArg, LambdaTerm, TypedLambdaArg,
+                                UnknownColumnError, constant, make_lambda,
                                 make_lambda_from_member,
                                 make_lambda_from_method,
                                 make_lambda_from_self, register_method,
                                 METHOD_REGISTRY)
+from repro.core.exprc import (EXPR_BACKENDS, FusedStage, build_steps,
+                              kernel_cache_info, reset_kernel_cache)
 from repro.core.computations import (AggregateComp, Computation, JoinComp,
                                      MultiSelectionComp, ScanSet,
                                      SelectionComp, TopKComp, WriteSet)
@@ -30,6 +33,8 @@ from repro.core.session import Session
 __all__ = [
     "Dataset", "Session", "NameScope", "default_scope",
     "structural_signature",
+    "EXPR_BACKENDS", "FusedStage", "build_steps", "kernel_cache_info",
+    "reset_kernel_cache", "TypedLambdaArg", "UnknownColumnError",
     "LambdaArg", "LambdaTerm", "constant", "make_lambda",
     "make_lambda_from_member", "make_lambda_from_method",
     "make_lambda_from_self", "register_method", "METHOD_REGISTRY",

@@ -21,10 +21,21 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.computations import (AggregateComp, Computation, JoinComp,
                                      MultiSelectionComp, ScanSet,
                                      SelectionComp, TopKComp, WriteSet)
-from repro.core.lambdas import LambdaArg, LambdaTerm
+from repro.core.lambdas import LambdaArg, LambdaTerm, TypedLambdaArg
 from repro.core.tcap import TCAPOp, TCAPProgram
 
 __all__ = ["compile_graph"]
+
+
+def _arg_for(comp_input: Computation, slot: int, col: str) -> LambdaArg:
+    """The lambda argument for one input: typed (members resolved against
+    the schema, typos fail at graph-build time) when the producing
+    computation declares an output schema, the classic untyped placeholder
+    otherwise."""
+    schema = comp_input.output_schema
+    if schema is not None:
+        return TypedLambdaArg(slot, schema, col)
+    return LambdaArg(slot, comp_input.output_type_name, col)
 
 
 class _Namer:
@@ -134,7 +145,7 @@ def compile_graph(sink: Computation) -> TCAPProgram:
         if isinstance(comp, (SelectionComp, MultiSelectionComp)):
             in_list, in_cols = rec(comp.inputs[0])
             in_col = in_cols[0]
-            arg = LambdaArg(0, comp.inputs[0].output_type_name, in_col)
+            arg = _arg_for(comp.inputs[0], 0, in_col)
             em = _Emitter(prog, namer, comp.name)
             s = _Stream(in_list, (in_col,))
             slot_cols = {0: in_col}
@@ -157,7 +168,7 @@ def compile_graph(sink: Computation) -> TCAPProgram:
         if isinstance(comp, AggregateComp):
             in_list, in_cols = rec(comp.inputs[0])
             in_col = in_cols[0]
-            arg = LambdaArg(0, comp.inputs[0].output_type_name, in_col)
+            arg = _arg_for(comp.inputs[0], 0, in_col)
             em = _Emitter(prog, namer, comp.name)
             s = _Stream(in_list, (in_col,))
             slot_cols = {0: in_col}
@@ -173,7 +184,7 @@ def compile_graph(sink: Computation) -> TCAPProgram:
         if isinstance(comp, TopKComp):
             in_list, in_cols = rec(comp.inputs[0])
             in_col = in_cols[0]
-            arg = LambdaArg(0, comp.inputs[0].output_type_name, in_col)
+            arg = _arg_for(comp.inputs[0], 0, in_col)
             em = _Emitter(prog, namer, comp.name)
             s = _Stream(in_list, (in_col,))
             slot_cols = {0: in_col}
@@ -194,7 +205,7 @@ def compile_graph(sink: Computation) -> TCAPProgram:
         sides = [rec(c) for c in comp.inputs]
         side_streams = [_Stream(lst, cols) for (lst, cols) in sides]
         record_col = {i: sides[i][1][0] for i in range(n)}
-        args = [LambdaArg(i, comp.inputs[i].output_type_name, record_col[i])
+        args = [_arg_for(comp.inputs[i], i, record_col[i])
                 for i in range(n)]
         sel = comp.get_selection(*args)
         conjuncts = _flatten_conjuncts(sel)

@@ -30,6 +30,12 @@ class Computation(abc.ABC):
 
     arity = 1
 
+    # the declared Record schema of this computation's output records, or
+    # None when unknown (untyped sets, projections to fresh types). When
+    # set, the compiler hands lambda construction functions a
+    # TypedLambdaArg, so column typos fail at graph-build time.
+    output_schema = None
+
     def __init__(self, name: Optional[str] = None,
                  scope: Optional[NameScope] = None):
         self.comp_id = (scope or default_scope()).next_id()
@@ -54,15 +60,28 @@ class Computation(abc.ABC):
 
 
 class ScanSet(Computation):
-    """Reads a stored set page-by-page (ObjectReader)."""
+    """Reads a stored set page-by-page (ObjectReader).
+
+    ``type_name`` may be a plain string (untyped, as before) or a
+    :class:`~repro.objectmodel.schema.Record` subclass — the canonical
+    typed form, which flows the schema to every downstream lambda argument.
+    """
 
     arity = 0
 
-    def __init__(self, db: str, set_name: str, type_name: str,
+    def __init__(self, db: str, set_name: str, type_name,
                  scope: Optional[NameScope] = None):
         super().__init__(name=f"Scan_{set_name}", scope=scope)
         self.db = db
         self.set_name = set_name
+        if isinstance(type_name, type):
+            from repro.objectmodel.schema import Record
+            if not issubclass(type_name, Record):
+                raise TypeError(
+                    f"ScanSet type_name must be a string or a Record "
+                    f"schema class, got {type_name!r}")
+            self.output_schema = type_name
+            type_name = type_name.type_name
         self.type_name = type_name
 
     @property

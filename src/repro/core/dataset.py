@@ -34,16 +34,19 @@ Lambda specifications accepted by the chain methods:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Union
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.computations import (AggregateComp, Computation, JoinComp,
                                      MultiSelectionComp, ScanSet,
                                      SelectionComp, TopKComp, WriteSet)
-from repro.core.lambdas import (LambdaArg, LambdaTerm, constant,
+from repro.core.lambdas import (LambdaArg, LambdaTerm, TypedLambdaArg,
+                                UnknownColumnError, constant, make_lambda,
                                 make_lambda_from_member,
                                 make_lambda_from_self)
+from repro.objectmodel.schema import pair_field_map, pair_schema
 
 __all__ = ["Dataset"]
 
@@ -62,11 +65,62 @@ def _as_term(spec: LambdaSpec, arg: LambdaArg) -> LambdaTerm:
     return term
 
 
+def _validate_spec(spec, schemas: Tuple) -> None:
+    """Eager graph-build-time column check for typed datasets: dry-run the
+    lambda construction function against typed placeholder args so a typo'd
+    column raises here — at the chain call — naming the schema's fields.
+    Untyped inputs (schema None) skip the check; construction-time errors
+    other than unknown columns still surface at compile, as before.
+
+    This invokes the construction function once more than compile does.
+    That is within contract — construction functions build terms, they
+    never touch data, and the paper requires them to be pure — and the
+    dry-run's terms are discarded, so native-lambda identities (the plan
+    cache key) are unaffected. A construction function with side effects
+    (consuming an iterator, counting calls) is out of contract on typed
+    datasets."""
+    if spec is None or any(s is None for s in schemas):
+        return
+    if isinstance(spec, str):
+        if spec not in schemas[0].field_set:
+            raise UnknownColumnError(spec, schemas[0])
+        return
+    args = [TypedLambdaArg(i, s) for i, s in enumerate(schemas)]
+    try:
+        spec(*args)
+    except UnknownColumnError:
+        raise
+    except Exception:
+        pass  # construction bug unrelated to columns — reported at compile
+
+
+@functools.lru_cache(maxsize=None)
+def _pair_projection(left: type, right: type):
+    """The default ``join()`` projection for two typed inputs: a native
+    stage packing both records into the synthesized pair schema (field
+    layout from :func:`~repro.objectmodel.schema.pair_field_map`, the
+    single source of the rename rule). Cached per schema pair so repeated
+    joins share one native-lambda identity (the strict plan-cache
+    signature keys natives by function id)."""
+    pair = pair_schema(left, right)
+    moves = pair_field_map(left, right)
+
+    def pack_pair(lrows, rrows):
+        sides = (lrows, rrows)
+        out = np.zeros(len(lrows), pair.dtype)
+        for dst, side, src in moves:
+            out[dst] = sides[side][src]
+        return out
+
+    return pack_pair, pair
+
+
 # --------------------------------------------------------------- plan nodes
 @dataclasses.dataclass(frozen=True)
 class _Scan:
     set_name: str
     type_name: str
+    schema: Optional[type] = None  # Record subclass when the set is typed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +148,7 @@ class _Join:
     right: Any
     on: Callable
     project: Callable
+    schema: Optional[type] = None  # pair schema for the default projection
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +165,22 @@ class _TopK:
     k: int
     score: LambdaSpec
     payload: LambdaSpec
+
+
+def _node_schema(node) -> Optional[type]:
+    """The record schema of a plan node's output, when statically known:
+    filters preserve it, identity selects preserve it, the default join
+    projection introduces the pair schema; projections through arbitrary
+    lambdas yield fresh (unknown) record types."""
+    if isinstance(node, _Scan):
+        return node.schema
+    if isinstance(node, _Filter):
+        return _node_schema(node.parent)
+    if isinstance(node, _Select):
+        return _node_schema(node.parent) if node.proj is None else None
+    if isinstance(node, _Join):
+        return node.schema
+    return None
 
 
 class Dataset:
@@ -132,6 +203,14 @@ class Dataset:
         self._sig = None   # its structural signature (plan-cache key)
         self._materialized = False  # write() target persisted already
 
+    # ------------------------------------------------------------ typing
+    @property
+    def schema(self) -> Optional[type]:
+        """The :class:`~repro.objectmodel.schema.Record` schema of this
+        handle's records, when statically known (typed scan, filters,
+        identity selects, default join projections)."""
+        return _node_schema(self._node)
+
     # ----------------------------------------------------------- chaining
     def _derive(self, node) -> "Dataset":
         if self._write_name is not None:
@@ -145,10 +224,12 @@ class Dataset:
         """Keep records where ``pred(arg)`` evaluates true."""
         if not callable(pred):
             raise TypeError("filter() takes a lambda construction function")
+        _validate_spec(pred, (self.schema,))
         return self._derive(_Filter(self._node, pred))
 
     def select(self, proj: LambdaSpec) -> "Dataset":
         """Project each record through ``proj`` (a.k.a. :meth:`map`)."""
+        _validate_spec(proj, (self.schema,))
         return self._derive(_Select(self._node, proj))
 
     map = select
@@ -157,30 +238,58 @@ class Dataset:
                  pred: Optional[Callable] = None) -> "Dataset":
         """Set-valued projection: each record maps to zero or more outputs
         (MultiSelectionComp — the projection returns per-row sequences)."""
+        _validate_spec(proj, (self.schema,))
+        _validate_spec(pred, (self.schema,))
         return self._derive(_FlatMap(self._node, proj, pred))
 
     def join(self, other: "Dataset", on: Callable,
-             project: Callable) -> "Dataset":
+             project: Optional[Callable] = None) -> "Dataset":
         """Equi/theta join. ``on(a, b)`` builds the predicate (equality
         conjuncts become hash-join keys, the rest a residual filter — §7);
-        ``project(a, b)`` builds the output record."""
+        ``project(a, b)`` builds the output record.
+
+        ``project`` is optional when both inputs are typed: the default
+        packs both records into a synthesized pair schema
+        (:func:`~repro.objectmodel.schema.pair_schema` — left fields keep
+        their names, colliding right fields get a type-name prefix), and
+        the joined dataset stays typed under that schema."""
         if other._session is not self._session:
             raise ValueError("cannot join datasets from different sessions")
         if other._write_name is not None:
             raise ValueError(
                 "cannot join against a write()-terminated dataset — "
                 "collect() it and session.read() the materialized set")
-        return self._derive(_Join(self._node, other._node, on, project))
+        schemas = (self.schema, other.schema)
+        _validate_spec(on, schemas)
+        pair = None
+        if project is None:
+            if schemas[0] is None or schemas[1] is None:
+                raise ValueError(
+                    "join(project=None) needs typed datasets on both sides "
+                    "(load them with a Record schema) — otherwise pass an "
+                    "explicit project=")
+            pack, pair = _pair_projection(*schemas)
+            name = f"pack{pair.type_name}"
+            project = (lambda a, b, _fn=pack, _nm=name:
+                       make_lambda([a, b], _fn, _nm))
+        else:
+            _validate_spec(project, schemas)
+        return self._derive(_Join(self._node, other._node, on, project,
+                                  schema=pair))
 
     def aggregate(self, key: LambdaSpec, value: LambdaSpec,
                   combiner: str = "sum") -> "Dataset":
         """Two-stage distributed aggregation: per-record (key, value)
         extraction + an associative combiner (``sum``/``max``/``min``)."""
+        _validate_spec(key, (self.schema,))
+        _validate_spec(value, (self.schema,))
         return self._derive(_Aggregate(self._node, key, value, combiner))
 
     def top_k(self, k: int, score: LambdaSpec,
               payload: LambdaSpec) -> "Dataset":
         """Global top-k by score (the paper's TopJaccard pattern)."""
+        _validate_spec(score, (self.schema,))
+        _validate_spec(payload, (self.schema,))
         return self._derive(_TopK(self._node, int(k), score, payload))
 
     def write(self, set_name: str) -> "Dataset":
@@ -240,7 +349,8 @@ def _synthesize(sess, node) -> Computation:
     scope = sess.scope
 
     if isinstance(node, _Scan):
-        return ScanSet(sess.db, node.set_name, node.type_name, scope=scope)
+        return ScanSet(sess.db, node.set_name, node.schema or node.type_name,
+                       scope=scope)
 
     if isinstance(node, (_Filter, _Select)):
         # fuse the maximal filter* [select] run into ONE SelectionComp —
@@ -271,6 +381,9 @@ def _synthesize(sess, node) -> Computation:
 
         comp = _FluentSelection(name=scope.fresh("Select"), scope=scope)
         comp.set_input(upstream)
+        # filters (and identity selects) preserve the record schema, so
+        # downstream lambda args stay typed across the fused selection
+        comp.output_schema = _node_schema(node)
         return comp
 
     if isinstance(node, _FlatMap):
@@ -303,6 +416,7 @@ def _synthesize(sess, node) -> Computation:
         comp = _FluentJoin(arity=2, name=scope.fresh("Join"), scope=scope)
         comp.set_input(0, left)
         comp.set_input(1, right)
+        comp.output_schema = node.schema  # pair schema (default projection)
         return comp
 
     if isinstance(node, _Aggregate):

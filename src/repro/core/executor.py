@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.compiler import compile_graph
 from repro.core.computations import Computation
+from repro.core.exprc import EXPR_BACKENDS, FusedStage, build_steps
 from repro.core.optimizer import OptimizerReport, optimize
 from repro.core.physical import PhysicalPlan, plan_physical
 from repro.core.relops import (AggMap, assemble_output, batch_kernel,
@@ -58,10 +59,14 @@ class ExecStats:
 class Executor:
     """Vectorized TCAP executor over a PagedStore with P logical partitions."""
 
+    #: stage-compiler backend; NaiveExecutor pins "interp" (see below)
+    expr_backend = "numpy"
+
     def __init__(self, store: PagedStore, num_partitions: int = 4,
                  vector_rows: int = 8192, do_optimize: bool = True,
                  broadcast_threshold_bytes: int = 2 << 30,
-                 write_outputs: bool = True):
+                 write_outputs: bool = True,
+                 expr_backend: Optional[str] = None):
         self.store = store
         self.P = num_partitions
         self.vector_rows = vector_rows
@@ -71,6 +76,11 @@ class Executor:
         # (the Session facade) materializes results itself so single- and
         # multi-column outputs get the same structured-record treatment.
         self.write_outputs = write_outputs
+        if expr_backend is not None:
+            if expr_backend not in EXPR_BACKENDS:
+                raise ValueError(f"unknown expr_backend {expr_backend!r} "
+                                 f"(expected one of {EXPR_BACKENDS})")
+            self.expr_backend = expr_backend
         self.stats = ExecStats()
 
     # ------------------------------------------------------------ public
@@ -78,23 +88,37 @@ class Executor:
         prog = compile_graph(sink)
         return self.execute_program(prog)
 
-    def execute_program(self, prog: TCAPProgram) -> Dict[str, np.ndarray]:
+    def execute_program(self, prog: TCAPProgram,
+                        plan: Optional[PhysicalPlan] = None,
+                        steps: Optional[list] = None
+                        ) -> Dict[str, np.ndarray]:
+        """Run a TCAP program. ``plan`` / ``steps`` let the Session front-end
+        pass its cached physical plan and compiled stage plan; standalone
+        callers leave them None and both are derived here."""
         self.stats = ExecStats()
         if self.do_optimize:
             prog, rep = optimize(prog)
             self.stats.optimizer = rep
-        plan = plan_physical(prog, self.store, self.broadcast_threshold,
-                             num_partitions=self.P)
-        return self._run(prog, plan)
+            plan = steps = None  # derived for the pre-optimized program
+        if plan is None:
+            plan = plan_physical(prog, self.store, self.broadcast_threshold,
+                                 num_partitions=self.P)
+        if steps is None:
+            steps = build_steps(prog, self.expr_backend)
+        return self._run(steps, plan)
 
     # --------------------------------------------------------- internals
-    def _run(self, prog: TCAPProgram, plan: PhysicalPlan
+    def _run(self, steps: list, plan: PhysicalPlan
              ) -> Dict[str, np.ndarray]:
         # data[list_name][partition] -> list of VectorList batches
         data: Dict[str, List[List[VectorList]]] = {}
         result: Dict[str, np.ndarray] = {}
 
-        for op in prog.ops:
+        for step in steps:
+            if isinstance(step, FusedStage):
+                data[step.out] = self._map_batches(data[step.in_list], step)
+                continue
+            op = step
             if op.op == "SCAN":
                 data[op.out] = self._scan(op)
             elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
@@ -217,7 +241,16 @@ class NaiveExecutor(Executor):
 
     Identical semantics, but every stage is applied one record at a time via
     Python-level iteration — the cost model of a managed-runtime row
-    iterator. Used only as the measured baseline in benchmarks."""
+    iterator. Used only as the measured baseline in benchmarks. Always runs
+    the per-op interpreter (``expr_backend="interp"``): fused stages would
+    defeat the point of the strawman."""
+
+    expr_backend = "interp"
+
+    def __init__(self, *args, **kw):
+        kw.pop("expr_backend", None)
+        super().__init__(*args, **kw)
+        self.expr_backend = "interp"
 
     def _map_batches(self, parts, fn) -> List[List[VectorList]]:
         out: List[List[VectorList]] = []

@@ -23,9 +23,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "LambdaArg", "LambdaTerm", "make_lambda_from_member",
-    "make_lambda_from_method", "make_lambda", "make_lambda_from_self",
-    "constant", "register_method", "METHOD_REGISTRY",
+    "LambdaArg", "TypedLambdaArg", "LambdaTerm", "UnknownColumnError",
+    "make_lambda_from_member", "make_lambda_from_method", "make_lambda",
+    "make_lambda_from_self", "constant", "register_method",
+    "METHOD_REGISTRY",
 ]
 
 _ids = itertools.count(1)
@@ -37,23 +38,60 @@ METHOD_REGISTRY: Dict[Tuple[str, str], Callable] = {}
 
 
 def register_method(type_name: str, method_name: str):
+    """Register a vectorized method for a type (the catalog's .so shipping).
+
+    The callable must be *elementwise*: row i of its output may depend only
+    on row i of its input. The stage compiler relies on this to fuse method
+    calls across deferred filters (values of surviving rows must not change
+    when computed over a superset of rows); whole-column behavior belongs
+    in an opaque :func:`make_lambda` native, which the engine never fuses
+    across a filter.
+    """
     def deco(fn):
         METHOD_REGISTRY[(type_name, method_name)] = fn
         return fn
     return deco
 
 
+class UnknownColumnError(AttributeError):
+    """A typed dataset was asked for a column its schema does not declare.
+
+    Raised at graph-build time (while the lambda term tree is being
+    constructed), naming the schema and its fields — instead of a late
+    KeyError deep inside a kernel."""
+
+    def __init__(self, attr: str, schema):
+        self.attr = attr
+        self.schema = schema
+        fields = ", ".join(schema.fields) if schema is not None else "?"
+        super().__init__(
+            f"unknown column {attr!r} on typed records "
+            f"{getattr(schema, 'type_name', '?')!r} — schema fields are: "
+            f"[{fields}]")
+
+
 class LambdaArg:
-    """A placeholder for one input set of a Computation (``Handle<T> arg``)."""
+    """A placeholder for one input set of a Computation (``Handle<T> arg``).
+
+    Internals live under underscore names (``_slot``/``_type_name``/
+    ``_name``) with public property mirrors, so :class:`TypedLambdaArg`
+    can resolve *every* non-underscore attribute against its schema without
+    the engine tripping over its own accessors.
+    """
 
     def __init__(self, slot: int, type_name: str, name: Optional[str] = None):
-        self.slot = slot
-        self.type_name = type_name
-        self.name = name or f"in{slot}"
+        self._slot = slot
+        self._type_name = type_name
+        self._name = name or f"in{slot}"
+
+    slot = property(lambda self: self._slot)
+    type_name = property(lambda self: self._type_name)
+    name = property(lambda self: self._name)
 
     def term(self) -> "LambdaTerm":
-        return LambdaTerm("self", [], {"slot": self.slot,
-                                       "type": self.type_name}, args=(self,))
+        return LambdaTerm("self", [], {"slot": self._slot,
+                                       "type": self._type_name},
+                          args=(self,))
 
     def col(self, attr: str) -> "LambdaTerm":
         """Explicit column access: ``arg.col("name")``.
@@ -66,14 +104,56 @@ class LambdaArg:
     def __getattr__(self, attr: str) -> "LambdaTerm":
         """``arg.salary`` sugar for :func:`make_lambda_from_member`.
 
-        Footgun: this only fires for attributes Python does NOT find on the
-        object, so record fields named after a real LambdaArg attribute or
-        method — ``name``, ``slot``, ``type_name``, ``term``, ``col`` —
-        resolve to that attribute instead of a column access. Use
-        :meth:`col` (``arg.col("name")``) or
-        :func:`make_lambda_from_member` for those columns."""
+        Footgun (untyped args only): this only fires for attributes Python
+        does NOT find on the object, so record fields named after a real
+        LambdaArg attribute or method — ``name``, ``slot``, ``type_name``,
+        ``term``, ``col`` — resolve to that attribute instead of a column
+        access. Use :meth:`col` (``arg.col("name")``) or
+        :func:`make_lambda_from_member` for those columns. Typed datasets
+        (loaded with a :class:`~repro.objectmodel.schema.Record` schema)
+        don't have this problem: schema fields always win."""
         if attr.startswith("_"):
             raise AttributeError(attr)
+        return make_lambda_from_member(self, attr)
+
+
+class TypedLambdaArg(LambdaArg):
+    """A lambda argument whose members resolve against a declared schema.
+
+    ``arg.<field>`` is a column access for every schema field — including
+    names that shadow LambdaArg attributes (``name``, ``slot``, ...), which
+    kills the ``__getattr__`` footgun — and any non-field access raises
+    :class:`UnknownColumnError` at graph-build time with the schema's
+    fields in the message. That includes LambdaArg's own accessors
+    (``name``/``slot``/``type_name``): on a typed arg every public
+    attribute is a column, full stop — only :meth:`col` and :meth:`term`
+    stay callable (the engine reaches internals through underscore names).
+    """
+
+    _PUBLIC_API = frozenset({"col", "term"})
+
+    def __init__(self, slot: int, schema, name: Optional[str] = None):
+        super().__init__(slot, schema.type_name, name)
+        self._schema = schema
+
+    def __getattribute__(self, attr: str):
+        if not attr.startswith("_"):
+            schema = object.__getattribute__(self, "__dict__").get("_schema")
+            if schema is not None:
+                if attr in schema.field_set:
+                    return make_lambda_from_member(self, attr)
+                if attr not in TypedLambdaArg._PUBLIC_API:
+                    raise UnknownColumnError(attr, schema)
+        return object.__getattribute__(self, attr)
+
+    def __getattr__(self, attr: str):
+        if attr.startswith("_"):
+            raise AttributeError(attr)
+        raise UnknownColumnError(attr, self.__dict__.get("_schema"))
+
+    def col(self, attr: str) -> "LambdaTerm":
+        """Explicit (validated) column access; equivalent to ``arg.<attr>``
+        for typed args, kept for untyped-code compatibility."""
         return make_lambda_from_member(self, attr)
 
 
@@ -146,7 +226,7 @@ class LambdaTerm:
     # --------------------------------------------------------- metadata
     @property
     def depends_on_slots(self) -> Tuple[int, ...]:
-        return tuple(sorted({a.slot for a in self.args}))
+        return tuple(sorted({a._slot for a in self.args}))
 
     def structural_key(self) -> Tuple:
         """Key for CSE: two terms with equal keys compute the same value
@@ -209,18 +289,24 @@ _APPLY_BINOP = {
 
 
 # ------------------------------------------------------------- factories
+# NOTE: factories reach LambdaArg internals via underscore attributes and
+# unbound class methods (``LambdaArg.term(arg)``) so that schema fields on a
+# TypedLambdaArg can shadow every public accessor without breaking them.
 def make_lambda_from_member(arg: LambdaArg, attr: str) -> LambdaTerm:
-    return LambdaTerm("attAccess", [arg.term()],
-                      {"attName": attr, "onType": arg.type_name})
+    schema = arg.__dict__.get("_schema")
+    if schema is not None and attr not in schema.field_set:
+        raise UnknownColumnError(attr, schema)
+    return LambdaTerm("attAccess", [LambdaArg.term(arg)],
+                      {"attName": attr, "onType": arg._type_name})
 
 
 def make_lambda_from_method(arg: LambdaArg, method: str) -> LambdaTerm:
-    if (arg.type_name, method) not in METHOD_REGISTRY:
+    if (arg._type_name, method) not in METHOD_REGISTRY:
         raise KeyError(f"method {method!r} not registered for type "
-                       f"{arg.type_name!r} (register_method first — this is "
-                       "the catalog's .so registration)")
-    return LambdaTerm("methodCall", [arg.term()],
-                      {"methodName": method, "onType": arg.type_name})
+                       f"{arg._type_name!r} (register_method first — this "
+                       "is the catalog's .so registration)")
+    return LambdaTerm("methodCall", [LambdaArg.term(arg)],
+                      {"methodName": method, "onType": arg._type_name})
 
 
 def make_lambda(args: Sequence[LambdaArg] | LambdaArg, fn: Callable,
@@ -228,12 +314,12 @@ def make_lambda(args: Sequence[LambdaArg] | LambdaArg, fn: Callable,
     """Opaque native lambda — the engine cannot see inside (paper §4)."""
     if isinstance(args, LambdaArg):
         args = [args]
-    return LambdaTerm("native", [a.term() for a in args],
+    return LambdaTerm("native", [LambdaArg.term(a) for a in args],
                       {"fn": fn, "name": name})
 
 
 def make_lambda_from_self(arg: LambdaArg) -> LambdaTerm:
-    return arg.term()
+    return LambdaArg.term(arg)
 
 
 def constant(value) -> LambdaTerm:

@@ -47,10 +47,12 @@ import numpy as np
 from repro.core.compiler import compile_graph
 from repro.core.dataset import Dataset, _Scan
 from repro.core.executor import Executor
+from repro.core.exprc import EXPR_BACKENDS, build_steps
 from repro.core.naming import NameScope
 from repro.core.optimizer import OptimizerReport, optimize
-from repro.core.physical import plan_physical
+from repro.core.physical import PhysicalPlan, plan_physical
 from repro.core.tcap import TCAPProgram, structural_signature
+from repro.objectmodel.schema import Record
 from repro.objectmodel.store import PagedStore
 
 __all__ = ["Session"]
@@ -63,6 +65,14 @@ class _CacheEntry:
     unoptimized: TCAPProgram
     optimized: TCAPProgram
     report: OptimizerReport
+    # the physical plan derived from the optimized program + live catalog
+    # statistics, valid while the store's stats_version is unchanged
+    physical: Optional[PhysicalPlan] = None
+    stats_version: int = -1
+    # the compiled stage plan (fused/jitted kernels) for this session's
+    # expr_backend — pinned here so the warm path reuses kernel callables
+    # with no lookups at all
+    steps: Optional[list] = None
 
 
 class Session:
@@ -76,12 +86,17 @@ class Session:
                  executor_cls=Executor, backend: str = "local",
                  num_workers: Optional[int] = None,
                  worker_kind: Optional[str] = None,
-                 plan_cache_size: int = 64):
+                 plan_cache_size: int = 64,
+                 expr_backend: str = "numpy"):
         self.store = store if store is not None else PagedStore()
         self.db = db
         self.scope = NameScope()
         self.do_optimize = do_optimize
         self.backend = backend
+        if expr_backend not in EXPR_BACKENDS:
+            raise ValueError(f"unknown expr_backend {expr_backend!r} "
+                             f"(expected one of {EXPR_BACKENDS})")
+        self.expr_backend = expr_backend
         # the session drives optimization itself (through the plan cache),
         # so its executor always runs programs as given.
         if backend == "workers":
@@ -102,7 +117,8 @@ class Session:
                 num_workers=num_workers or num_partitions or 4,
                 vector_rows=vector_rows, do_optimize=False,
                 broadcast_threshold_bytes=broadcast_threshold_bytes,
-                write_outputs=False, worker_kind=worker_kind or "thread")
+                write_outputs=False, worker_kind=worker_kind or "thread",
+                expr_backend=expr_backend)
         elif backend == "local":
             if num_workers is not None:
                 raise ValueError(
@@ -118,7 +134,7 @@ class Session:
                 else num_partitions,
                 vector_rows=vector_rows, do_optimize=False,
                 broadcast_threshold_bytes=broadcast_threshold_bytes,
-                write_outputs=False)
+                write_outputs=False, expr_backend=expr_backend)
         else:
             raise ValueError(f"unknown backend {backend!r} "
                              "(expected 'local' or 'workers')")
@@ -129,6 +145,8 @@ class Session:
         self.cache_hits = 0
         self.cache_misses = 0
         self.cache_evictions = 0
+        self.phys_hits = 0
+        self.phys_misses = 0
         self.last_stats = None
         self.last_report: Optional[OptimizerReport] = None
 
@@ -146,17 +164,55 @@ class Session:
                 return name
 
     # -------------------------------------------------------------- I/O
-    def read(self, set_name: str, type_name: Optional[str] = None) -> Dataset:
-        """A Dataset over an existing stored set."""
+    def read(self, set_name: str, type_name=None) -> Dataset:
+        """A Dataset over an existing stored set.
+
+        ``type_name`` may be a :class:`~repro.objectmodel.schema.Record`
+        subclass — the canonical typed form: column accesses on the dataset
+        are then resolved against the schema at graph-build time — or a
+        plain string (untyped, ``col()`` escape hatch available)."""
+        if isinstance(type_name, type) and issubclass(type_name, Record):
+            stored = self.store.sets.get(set_name)
+            if stored is not None and stored.dtype != type_name.dtype:
+                raise TypeError(
+                    f"read({set_name!r}): stored layout {stored.dtype} does "
+                    f"not match schema {type_name.type_name!r} "
+                    f"({type_name.dtype})")
+            return Dataset(self, _Scan(set_name, type_name.type_name,
+                                       schema=type_name))
         return Dataset(self, _Scan(set_name, type_name or set_name))
 
     def load(self, name: str, records: np.ndarray,
-             type_name: Optional[str] = None) -> Dataset:
+             type_name=None) -> Dataset:
         """Store packed records under a fresh session-scoped set name and
-        return a Dataset over them (``sendData`` + scan)."""
+        return a Dataset over them (``sendData`` + scan). With a Record
+        schema as ``type_name``, the records are validated against the
+        schema's layout and the dataset is typed."""
+        if isinstance(type_name, type) and issubclass(type_name, Record):
+            records = type_name.validate(records)
         sname = self.fresh_set_name(name)
         self.store.send_data(sname, records)
         return self.read(sname, type_name or name)
+
+    def create_set(self, schema, name: Optional[str] = None) -> Dataset:
+        """Create an empty typed set from a Record schema and return the
+        (typed) Dataset over it; feed it via ``session.store.send_data``
+        or :meth:`load`. The schema class is the canonical argument — its
+        dtype defines the page layout, its fields type the columns."""
+        if not (isinstance(schema, type) and issubclass(schema, Record)):
+            raise TypeError(
+                f"create_set() takes a Record schema class, got {schema!r}")
+        if name is None:
+            sname = self.fresh_set_name(schema.type_name.lower())
+        else:
+            if name in self.store.reserved_names:
+                raise ValueError(
+                    f"create_set({name!r}): name is already reserved by a "
+                    "session (fresh_set_name) — creating it would let that "
+                    "session silently append into this set")
+            sname = name
+        self.store.create_set(sname, schema.dtype)
+        return self.read(sname, schema)
 
     # --------------------------------------------------------- pipeline
     def _compile(self, ds: Dataset) -> TCAPProgram:
@@ -168,25 +224,58 @@ class Session:
             ds._sig = structural_signature(ds._prog, strict=True)
         return ds._prog
 
-    def _plan(self, ds: Dataset) -> Tuple[TCAPProgram,
-                                          Optional[OptimizerReport]]:
+    def _plan(self, ds: Dataset):
+        """Compile + optimize (plan-cached) + physically plan (cached per
+        store stats_version) + stage-compile (kernels pinned on the cache
+        entry). Returns ``(prog, report, physical_plan, steps)`` — the
+        latter two are None when optimization is off (the executor then
+        derives both itself)."""
         prog = self._compile(ds)
         if not self.do_optimize:
-            return prog, None
+            return prog, None, None, None
         key = ds._sig
         entry = self._plan_cache.get(key)
         if entry is not None:
             self.cache_hits += 1
             self._plan_cache.move_to_end(key)  # LRU touch
-            return (self._rebind_output(entry.optimized, ds.output_set),
-                    entry.report)
-        opt, rep = optimize(prog)
-        self.cache_misses += 1
-        self._plan_cache[key] = _CacheEntry(prog, opt, rep)
-        while len(self._plan_cache) > self.plan_cache_size:
-            self._plan_cache.popitem(last=False)
-            self.cache_evictions += 1
-        return opt, rep
+        else:
+            opt, rep = optimize(prog)
+            self.cache_misses += 1
+            entry = _CacheEntry(prog, opt, rep)
+            self._plan_cache[key] = entry
+            while len(self._plan_cache) > self.plan_cache_size:
+                self._plan_cache.popitem(last=False)
+                self.cache_evictions += 1
+        return (self._rebind_output(entry.optimized, ds.output_set),
+                entry.report, self._physical_for(entry),
+                self._steps_for(entry))
+
+    def _physical_for(self, entry: _CacheEntry) -> PhysicalPlan:
+        """The physical plan cached alongside the logical one, re-derived
+        only when the store's statistics version moved (sets grew or
+        appeared) — the ROADMAP follow-up to per-execution re-planning."""
+        ver = self.store.stats_version
+        if entry.physical is not None and entry.stats_version == ver:
+            self.phys_hits += 1
+            return entry.physical
+        self.phys_misses += 1
+        entry.physical = plan_physical(
+            entry.optimized, self.store, self.executor.broadcast_threshold,
+            num_partitions=self.executor.P)
+        entry.stats_version = ver
+        return entry.physical
+
+    def _steps_for(self, entry: _CacheEntry) -> Optional[list]:
+        """The compiled stage plan for the local executor, pinned on the
+        cache entry so warm queries reuse fused/jitted kernel callables
+        directly. The workers backend compiles its own stages from the
+        shipped program (same kernel LRU, shared per process)."""
+        if self.backend != "local":
+            return None
+        if entry.steps is None:
+            entry.steps = build_steps(entry.optimized,
+                                      self.executor.expr_backend)
+        return entry.steps
 
     @staticmethod
     def _rebind_output(prog: TCAPProgram, out_set: str) -> TCAPProgram:
@@ -209,8 +298,8 @@ class Session:
                 f"write({write_name!r}): set already exists in the store — "
                 "pick a fresh name (Session.fresh_set_name) to avoid "
                 "silently reading stale or merged data")
-        prog, rep = self._plan(ds)
-        result = self.executor.execute_program(prog)
+        prog, rep, plan, steps = self._plan(ds)
+        result = self.executor.execute_program(prog, plan=plan, steps=steps)
         self.last_stats = self.executor.stats
         self.last_report = rep
         if write_name is not None and not ds._materialized:
@@ -240,10 +329,11 @@ class Session:
         self.store.send_data(name, recs)
 
     def _explain(self, ds: Dataset) -> str:
-        prog, rep = self._plan(ds)
-        plan = plan_physical(prog, self.store,
-                             self.executor.broadcast_threshold,
-                             num_partitions=self.executor.P)
+        prog, rep, plan, steps = self._plan(ds)
+        if plan is None:
+            plan = plan_physical(prog, self.store,
+                                 self.executor.broadcast_threshold,
+                                 num_partitions=self.executor.P)
         backend = (f"workers x{self.executor.P}" if self.backend == "workers"
                    else f"local sim x{self.executor.P}")
         lines = [f"== optimized TCAP ({len(prog)} ops) =="]
@@ -255,7 +345,8 @@ class Session:
                 f"{rep.dead_ops_removed}")
         lines.append(prog.to_text())
         lines.append(f"== physical plan: {len(plan.pipelines)} pipelines, "
-                     f"{self.executor.P} partitions ({backend}) ==")
+                     f"{self.executor.P} partitions ({backend}, "
+                     f"expr={self.executor.expr_backend}) ==")
         for i, pipe in enumerate(plan.pipelines):
             stages = " -> ".join(op.op for op in pipe)
             lines.append(f"  pipeline {i}: {stages}")
@@ -292,3 +383,8 @@ class Session:
                 "entries": len(self._plan_cache),
                 "evictions": self.cache_evictions,
                 "capacity": self.plan_cache_size}
+
+    def physical_plan_cache_info(self) -> Dict[str, int]:
+        """Hit/miss counters for the physical plans cached alongside the
+        logical plan cache (invalidated by the store stats_version)."""
+        return {"hits": self.phys_hits, "misses": self.phys_misses}

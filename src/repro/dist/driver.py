@@ -62,9 +62,20 @@ class DistributedExecutor:
     def __init__(self, store: PagedStore, num_workers: int = 4,
                  vector_rows: int = 8192, do_optimize: bool = True,
                  broadcast_threshold_bytes: int = 2 << 30,
-                 write_outputs: bool = True, worker_kind: str = "thread"):
+                 write_outputs: bool = True, worker_kind: str = "thread",
+                 expr_backend: str = "numpy"):
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
+        from repro.core.exprc import EXPR_BACKENDS
+        if expr_backend not in EXPR_BACKENDS:
+            raise ValueError(f"unknown expr_backend {expr_backend!r} "
+                             f"(expected one of {EXPR_BACKENDS})")
+        if worker_kind == "fork" and expr_backend == "jax":
+            raise ValueError(
+                "worker_kind='fork' cannot run expr_backend='jax': XLA's "
+                "runtime threads do not survive a fork taken after jax "
+                "initialized in the parent (forked children would hang in "
+                "jit until the 30s SIGTERM) — use worker_kind='thread'")
         if worker_kind not in ("thread", "fork"):
             raise ValueError(f"unknown worker_kind {worker_kind!r} "
                              "(expected 'thread' or 'fork')")
@@ -75,6 +86,7 @@ class DistributedExecutor:
         self.broadcast_threshold = broadcast_threshold_bytes
         self.write_outputs = write_outputs
         self.worker_kind = worker_kind
+        self.expr_backend = expr_backend
         self.stats = ExecStats()
         self.worker_stats: List[ExecStats] = []
 
@@ -82,20 +94,28 @@ class DistributedExecutor:
     def execute(self, sink: Computation) -> Dict[str, np.ndarray]:
         return self.execute_program(compile_graph(sink))
 
-    def execute_program(self, prog: TCAPProgram) -> Dict[str, np.ndarray]:
+    def execute_program(self, prog: TCAPProgram,
+                        plan: Optional[PhysicalPlan] = None,
+                        steps=None) -> Dict[str, np.ndarray]:
+        # `steps` (the Session's locally compiled stage plan) is accepted
+        # for interface parity with Executor and ignored: each worker
+        # compiles its own stages from the shipped program, deduplicated by
+        # the process-wide kernel LRU.
         self.stats = ExecStats()
         if self.do_optimize:
             prog, rep = optimize(prog)
             self.stats.optimizer = rep
-        plan = plan_physical(prog, self.store, self.broadcast_threshold,
-                             num_partitions=self.P)
+            plan = None
+        if plan is None:
+            plan = plan_physical(prog, self.store, self.broadcast_threshold,
+                                 num_partitions=self.P)
         placement = place_scans(prog, self.store, self.P)
         shards = [build_shard_store(self.store, placement, w)
                   for w in range(self.P)]
         runtime = (_ThreadRuntime if self.worker_kind == "thread"
                    else _ProcessRuntime)(self.P)
         outputs, self.worker_stats = runtime.run(
-            prog, plan, shards, self.vector_rows)
+            prog, plan, shards, self.vector_rows, self.expr_backend)
         self._aggregate_stats(prog, plan)
         return self._assemble(prog, outputs)
 
@@ -143,7 +163,8 @@ class _ThreadRuntime:
         self.P = P
 
     def run(self, prog: TCAPProgram, plan: PhysicalPlan,
-            shards: List[PagedStore], vector_rows: int
+            shards: List[PagedStore], vector_rows: int,
+            expr_backend: str = "numpy"
             ) -> Tuple[List[List], List[ExecStats]]:
         worker_queues = [queue.SimpleQueue() for _ in range(self.P)]
         driver_queue: "queue.SimpleQueue" = queue.SimpleQueue()
@@ -153,7 +174,7 @@ class _ThreadRuntime:
             t = threading.Thread(
                 target=worker_main,
                 args=(rank, self.P, tr, shards[rank], vector_rows, prog,
-                      plan),
+                      plan, expr_backend),
                 name=f"pc-worker-{rank}", daemon=True)
             threads.append(t)
             t.start()
@@ -182,7 +203,8 @@ class _ProcessRuntime:
         self.P = P
 
     def run(self, prog: TCAPProgram, plan: PhysicalPlan,
-            shards: List[PagedStore], vector_rows: int
+            shards: List[PagedStore], vector_rows: int,
+            expr_backend: str = "numpy"
             ) -> Tuple[List[List], List[ExecStats]]:
         import multiprocessing as mp
         try:
@@ -200,7 +222,7 @@ class _ProcessRuntime:
             p = ctx.Process(
                 target=_process_child,
                 args=(rank, self.P, pipes[rank][1], shards[rank],
-                      vector_rows, prog, plan),
+                      vector_rows, prog, plan, expr_backend),
                 name=f"pc-worker-{rank}", daemon=True)
             procs.append(p)
             p.start()
@@ -276,10 +298,10 @@ class _ProcessRuntime:
 
 
 def _process_child(rank: int, P: int, conn, shard: PagedStore,
-                   vector_rows: int, prog: TCAPProgram,
-                   plan: PhysicalPlan) -> None:  # pragma: no cover - forked
+                   vector_rows: int, prog: TCAPProgram, plan: PhysicalPlan,
+                   expr_backend: str) -> None:  # pragma: no cover - forked
     tr = ProcessTransport(rank, conn)
-    worker_main(rank, P, tr, shard, vector_rows, prog, plan)
+    worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend)
     conn.close()
 
 

@@ -26,6 +26,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.executor import ExecStats
+from repro.core.exprc import FusedStage, build_steps
 from repro.core.physical import PhysicalPlan
 from repro.core.relops import (AggMap, batch_kernel, batch_topk,
                                concat_batches, merge_topk, probe_join,
@@ -44,20 +45,40 @@ class WorkerRuntime:
     """One worker: a rank, its shard store, and a transport to its peers."""
 
     def __init__(self, rank: int, num_workers: int, transport,
-                 shard: PagedStore, vector_rows: int = 8192):
+                 shard: PagedStore, vector_rows: int = 8192,
+                 expr_backend: str = "numpy"):
         self.rank = rank
         self.P = num_workers
         self.tr = transport
         self.store = shard
         self.vector_rows = vector_rows
+        self.expr_backend = expr_backend
         self.stats = ExecStats()
 
     # ------------------------------------------------------------ driver
     def run(self, prog: TCAPProgram, plan: PhysicalPlan) -> None:
-        """Execute the program; OUTPUT batches stream to the driver."""
+        """Execute the program; OUTPUT batches stream to the driver.
+
+        The worker compiles its own stage plan from the shipped program
+        (:func:`~repro.core.exprc.build_steps`) — compilation is
+        deterministic and the kernel LRU is process-wide, so thread workers
+        share one jitted kernel per query shape and fork workers rebuild
+        identical ones (prefer ``worker_kind="thread"`` with
+        ``expr_backend="jax"``: XLA's runtime threads do not survive a
+        fork taken after jax initialized in the parent). Exchange ops
+        index the program by op position, so the fused steps are walked
+        with their op indices preserved."""
         self.stats = ExecStats()
+        steps = build_steps(prog, self.expr_backend)
         data: Dict[str, List[VectorList]] = {}
-        for i, op in enumerate(prog.ops):
+        i = -1  # op index within prog (exchange tags key on it)
+        for step in steps:
+            if isinstance(step, FusedStage):
+                i += len(step.ops)
+                data[step.out] = [step(vl) for vl in data[step.in_list]]
+                continue
+            op = step
+            i += 1
             if op.op == "SCAN":
                 data[op.out] = self._scan(op)
             elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
@@ -177,10 +198,11 @@ class WorkerRuntime:
 
 def worker_main(rank: int, num_workers: int, transport, shard: PagedStore,
                 vector_rows: int, prog: TCAPProgram,
-                plan: PhysicalPlan) -> None:
+                plan: PhysicalPlan, expr_backend: str = "numpy") -> None:
     """Entry point for both worker kinds: run, then report stats (or the
     failure) to the driver."""
-    rt = WorkerRuntime(rank, num_workers, transport, shard, vector_rows)
+    rt = WorkerRuntime(rank, num_workers, transport, shard, vector_rows,
+                       expr_backend)
     try:
         rt.run(prog, plan)
         transport.send(DRIVER, "done", rt.stats)

@@ -12,6 +12,10 @@ from repro.objectmodel.handle import (GLOBAL_TYPES, HANDLE_DTYPE, NULL_HANDLE,
 from repro.objectmodel.vectorlist import VectorList
 from repro.objectmodel.pool import BufferPool, PageState
 from repro.objectmodel.store import PagedSet, PagedStore
+from repro.objectmodel.schema import (Field, Record, boolean, f32, f64, i8,
+                                      i16, i32, i64, pair_schema, record,
+                                      schema_for, u8, u16, u32, u64, vector,
+                                      S, U)
 from repro.objectmodel.kvcache import (DenseKVCache, KVCacheConfig,
                                        KVPageManager, PagedKVState,
                                        dense_append, gather_paged_kv,
@@ -26,4 +30,7 @@ __all__ = [
     "PagedStore", "DenseKVCache", "KVCacheConfig", "KVPageManager",
     "PagedKVState", "dense_append", "gather_paged_kv", "init_dense_cache",
     "init_paged_state", "paged_append",
+    "Field", "Record", "record", "schema_for", "pair_schema",
+    "i8", "i16", "i32", "i64", "u8", "u16", "u32", "u64",
+    "f32", "f64", "boolean", "S", "U", "vector",
 ]

@@ -96,6 +96,12 @@ class PagedStore:
         # backed by pages — shared here so sessions sharing this store
         # cannot both claim the same name before either writes.
         self.reserved_names: set = set()
+        # bumped whenever catalog statistics change (sets created, records
+        # appended, spills restored) — physical plans derived from these
+        # statistics are cached against this counter and re-derived when it
+        # moves. Direct PagedSet.append_records calls bypass it; all engine
+        # writes go through send_data.
+        self.stats_version = 0
 
     def create_set(self, name: str, dtype: np.dtype,
                    page_size: Optional[int] = None) -> PagedSet:
@@ -103,6 +109,7 @@ class PagedStore:
             raise KeyError(f"set {name!r} exists")
         s = PagedSet(name, dtype, page_size or self.page_size)
         self.sets[name] = s
+        self.stats_version += 1
         return s
 
     def get_set(self, name: str) -> PagedSet:
@@ -114,6 +121,7 @@ class PagedStore:
         s = self.sets.get(name) or self.create_set(
             name, dtype if dtype is not None else records.dtype)
         s.append_records(records)
+        self.stats_version += 1
         return s
 
     # ------------------------------------------------------------- spill
@@ -149,4 +157,5 @@ class PagedStore:
             s.pages.append(Page.from_payload(i, raw, self.page_size))
             s.counts.append(cnt)
         self.sets[name] = s
+        self.stats_version += 1
         return s

@@ -1,0 +1,78 @@
+"""Shared random-term-tree machinery for the cross-backend equivalence
+suites (hypothesis-driven in test_exprc_properties.py, deterministic
+sampling in test_exprc.py).
+
+An AST is nested tuples: ``("col", name)`` leaves, bare numeric constants
+(right operands only), ``(op, lhs, rhs)`` for arithmetic/comparison/bool
+connectives and ``("~", sub)`` for negation. :func:`build_term` interprets
+one against a lambda argument via the normal operator overloads.
+"""
+import numpy as np
+
+COLS = ("a", "b", "c")
+ARITH = ("+", "-", "*")
+CMP = ("<", ">", "<=", ">=", "==", "!=")
+
+OPS = {
+    "+": lambda a, b: a + b, "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "<": lambda a, b: a < b, ">": lambda a, b: a > b,
+    "<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b,
+    "==": lambda a, b: a == b, "!=": lambda a, b: a != b,
+    "&": lambda a, b: a & b, "|": lambda a, b: a | b,
+}
+
+
+def build_term(ast, arg):
+    if isinstance(ast, tuple) and ast[0] == "col":
+        return arg.col(ast[1])
+    if isinstance(ast, tuple):
+        if ast[0] == "~":
+            return ~build_term(ast[1], arg)
+        lhs = build_term(ast[1], arg)
+        rhs = (build_term(ast[2], arg)
+               if isinstance(ast[2], tuple) else ast[2])
+        return OPS[ast[0]](lhs, rhs)
+    return ast  # bare constant (only ever a right operand)
+
+
+def sample_num(rng, depth=0):
+    if depth >= 2 or rng.random() < 0.4:
+        return ("col", COLS[rng.integers(len(COLS))])
+    rhs = (sample_num(rng, depth + 1) if rng.random() < 0.6
+           else round(float(rng.uniform(-20, 20)), 2))
+    return (ARITH[rng.integers(len(ARITH))], sample_num(rng, depth + 1),
+            rhs)
+
+
+def sample_pred(rng, depth=0):
+    if depth >= 2 or rng.random() < 0.5:
+        rhs = (sample_num(rng) if rng.random() < 0.6
+               else int(rng.integers(-20, 20)))
+        return (CMP[rng.integers(len(CMP))], sample_num(rng), rhs)
+    kind = rng.random()
+    if kind < 0.33:
+        return ("~", sample_pred(rng, depth + 1))
+    op = "&" if kind < 0.66 else "|"
+    return (op, sample_pred(rng, depth + 1), sample_pred(rng, depth + 1))
+
+
+def sample_query(rng):
+    preds = [sample_pred(rng) for _ in range(rng.integers(0, 4))]
+    return preds, sample_num(rng)
+
+
+def collect_tree_query(session_cls, records, schema, backends, preds, proj,
+                       parts):
+    """Run the same filter*/select chain on every backend; returns the
+    per-backend collect() results for byte comparison."""
+    results = []
+    for be in backends:
+        sess = session_cls(num_partitions=parts, expr_backend=be)
+        ds = sess.load("t", records, schema)
+        for p in preds:
+            ds = ds.filter(lambda t, _p=p: build_term(_p, t))
+        ds = ds.select(lambda t: build_term(proj, t))
+        with np.errstate(all="ignore"):
+            results.append(ds.collect())
+    return results

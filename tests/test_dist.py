@@ -36,7 +36,8 @@ def _emps(n=700, seed=3):
     return emps, deps
 
 
-def _sessions(n=700, *, num_partitions=3, **workers_kw):
+def _sessions(n=700, *, num_partitions=3, expr_backend="numpy",
+              **workers_kw):
     """A (local, workers) session pair over identical but independent
     stores — byte-identical results must not depend on sharing state."""
     emps, deps = _emps(n)
@@ -44,7 +45,7 @@ def _sessions(n=700, *, num_partitions=3, **workers_kw):
     for kw in ({"num_partitions": num_partitions},
                {"backend": "workers", "num_workers": num_partitions,
                 **workers_kw}):
-        sess = Session(**kw)
+        sess = Session(expr_backend=expr_backend, **kw)
         e = sess.load("emps", emps, type_name="Emp")
         d = sess.load("deps", deps, type_name="Dep")
         pair.append((sess, e, d))
@@ -77,9 +78,15 @@ def _chain(kind, e, d):
     raise AssertionError(kind)
 
 
+@pytest.mark.parametrize("expr_backend", ["interp", "numpy", "jax"])
 @pytest.mark.parametrize("kind", ["filter_select", "join", "agg", "topk"])
-def test_fluent_chain_equivalence(kind):
-    (ls, le, ld), (ws, we, wd) = _sessions()
+def test_fluent_chain_equivalence(kind, expr_backend):
+    """The full equivalence matrix: every chain kind, local vs workers,
+    under every expression backend — all byte-identical. Cross-backend
+    equality is transitively enforced because each backend's local result
+    also byte-matches the others' (same data, same seed; see
+    test_exprc.py for the direct three-way comparison)."""
+    (ls, le, ld), (ws, we, wd) = _sessions(expr_backend=expr_backend)
     _assert_bytes_equal(_chain(kind, le, ld).collect(),
                         _chain(kind, we, wd).collect())
 

@@ -1,0 +1,44 @@
+"""Hypothesis property suite: byte-identical results across the
+interpreted / compiled-numpy / compiled-jax expression backends over
+random term trees and random record batches (shared AST machinery in
+``exprc_trees.py``)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; CI installs it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from exprc_trees import collect_tree_query  # noqa: E402
+from test_exprc import (BACKENDS, TRow, _assert_bytes_equal,  # noqa: E402
+                        _rows)
+from repro.core import Session  # noqa: E402
+
+_COLS = st.sampled_from([("col", "a"), ("col", "b"), ("col", "c")])
+_CONSTS = st.one_of(
+    st.integers(-20, 20),
+    st.floats(-20, 20, allow_nan=False).map(lambda x: round(x, 3)))
+_NUM = st.recursive(
+    _COLS,
+    lambda kids: st.tuples(st.sampled_from(["+", "-", "*"]), kids,
+                           st.one_of(kids, _CONSTS)),
+    max_leaves=5)
+_PRED = st.recursive(
+    st.tuples(st.sampled_from(["<", ">", "<=", ">=", "==", "!="]), _NUM,
+              st.one_of(_NUM, _CONSTS)),
+    lambda kids: st.one_of(
+        st.tuples(st.just("&"), kids, kids),
+        st.tuples(st.just("|"), kids, kids),
+        st.tuples(st.just("~"), kids)),
+    max_leaves=4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(_PRED, min_size=0, max_size=3), _NUM,
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 250),
+       st.integers(1, 4))
+def test_random_term_trees_byte_identical_across_backends(
+        preds, proj, seed, n, parts):
+    results = collect_tree_query(Session, _rows(n, seed), TRow, BACKENDS,
+                                 preds, proj, parts)
+    _assert_bytes_equal(results)

@@ -153,7 +153,7 @@ def test_fluent_compiles_to_same_optimized_tcap(name, hand_fn, fluent_fn):
     hand_opt, _ = optimize(compile_graph(hand_fn()))
     sess = Session(store=store)
     ds = fluent_fn(sess)
-    fluent_opt, _ = sess._plan(ds)
+    fluent_opt, *_ = sess._plan(ds)
     assert (structural_signature(hand_opt, strict=False)
             == structural_signature(fluent_opt, strict=False))
 

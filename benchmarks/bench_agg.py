@@ -1,0 +1,59 @@
+"""Grouped aggregation on the Q1 shape: interp vs fused-numpy vs jitted-jax
+segment reduction, local simulation vs the workers backend.
+
+The query is the full TPC-H Q1 pricing summary — one ``group_by().agg()``
+with two key columns and eight aggregate outputs (sums, composite means, a
+count) over ten accumulator columns. Per backend pair the warm µs/query is
+reported; the derived column carries the speedup over the interpreter, the
+cold (compile/trace) time, and for the workers backend the real
+page-serialized ``shuffle_bytes`` of the packed multi-column partial maps.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.apps.tpch import LineitemQ1, q1_pricing_summary
+from repro.core import Session, reset_kernel_cache
+from repro.data.synthetic import tpch_q1_lineitems
+
+EXPR_BACKENDS = ("interp", "numpy", "jax")
+
+
+def _time(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n: int = 300_000, reps: int = 5):
+    reset_kernel_cache()
+    records = tpch_q1_lineitems(n, seed=13)
+    rows = []
+    base = None
+    for be in EXPR_BACKENDS:
+        for label, kw in (("local", {"num_partitions": 4}),
+                          ("workers", {"backend": "workers",
+                                       "num_workers": 4})):
+            sess = Session(expr_backend=be, **kw)
+            ds = sess.load("lineitem", records, LineitemQ1)
+            handle = q1_pricing_summary(sess.store, ds.set_name,
+                                        session=sess)
+            t0 = time.perf_counter()
+            handle.collect()  # cold: compile + (jax) trace
+            cold_ms = (time.perf_counter() - t0) * 1e3
+            warm = _time(handle.collect, reps)
+            if base is None:
+                base = warm  # interp/local is the first pair
+            derived = (f"speedup_vs_interp={base / warm:.2f}x "
+                       f"cold={cold_ms:.0f}ms")
+            if label == "workers":
+                derived += (f" shuffle_bytes="
+                            f"{sess.executor.stats.shuffle_bytes}")
+            rows.append((f"agg_q1_{be}_{label}_n{n}", warm * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -9,6 +9,10 @@
   api      -> bench_api          (fluent front-end overhead vs raw executor)
   expr     -> bench_expr         (interpreted vs fused-numpy vs jitted-jax
                                   lambda stages; kernel-LRU hit counters)
+  agg      -> bench_agg          (TPC-H Q1 grouped aggregation:
+                                  group_by().agg() across expr backends,
+                                  local vs workers, partial-map shuffle
+                                  bytes)
   dist     -> bench_dist         (workers backend vs local sim; real
                                   page-serialized shuffle bytes vs N)
   §Roofline -> roofline          (from dry-run artifacts, if present)
@@ -20,7 +24,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_api, bench_dist, bench_expr,
+    from benchmarks import (bench_agg, bench_api, bench_dist, bench_expr,
                             bench_kernels, bench_linalg, bench_ml,
                             bench_oo, bench_objectmodel)
     suites = [
@@ -31,6 +35,7 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("api", bench_api.run),
         ("expr", bench_expr.run),
+        ("agg", bench_agg.run),
         ("dist", bench_dist.run),
     ]
     print("name,us_per_call,derived")

@@ -11,11 +11,11 @@ import time
 
 import numpy as np
 
-from repro.apps.tpch import (Lineitem, customers_per_supplier, load_tpch,
-                             topk_jaccard)
+from repro.apps.tpch import (Lineitem, LineitemQ1, customers_per_supplier,
+                             load_tpch, q1_pricing_summary, topk_jaccard)
 from repro.core import Session
 from repro.core.executor import Executor, NaiveExecutor
-from repro.data.synthetic import denormalized_tpch
+from repro.data.synthetic import denormalized_tpch, tpch_q1_lineitems
 from repro.objectmodel import PagedStore
 
 cust, lines, n_supp, n_parts = denormalized_tpch(800, seed=4)
@@ -40,24 +40,31 @@ print(f"top-8 Jaccard in {t_top*1e3:.0f} ms: "
       f"customers {ids.tolist()} scores {np.round(scores, 3).tolist()}")
 print(f"session plan cache: {sess.plan_cache_info()}")
 
-# a typed ad hoc query (TPC-H Q1 shape) under all three expr backends —
-# byte-identical results, the fused/jitted stages just run it faster
-revenues = {}
+# the full TPC-H Q1 pricing summary — ONE group_by().agg() query with all
+# eight aggregate columns (sums, composite means, count), under all three
+# expr backends: byte-identical results; the fused stages + the jax
+# on-device segment reduction just run it faster
+q1_lines = tpch_q1_lineitems(120_000, seed=11)
+q1_results = {}
 for be in ("interp", "numpy", "jax"):
     s_be = Session(num_partitions=4, expr_backend=be)
-    lds = s_be.load("lineitems", lines, Lineitem)
+    lds = s_be.load("lineitem", q1_lines, LineitemQ1)
+    q = q1_pricing_summary(s_be.store, lds.set_name, session=s_be)
+    q.collect()  # warm: compile + jit once
     t0 = time.perf_counter()
-    r = (lds.filter(lambda l: (l.qty > 5) & (l.partkey != 0))
-            .aggregate(key="suppkey",
-                       value=lambda l: l.price * l.qty))
-    out = r.collect()
-    revenues[be] = np.asarray(out["value"])
-    print(f"  Q1-shape revenue by supplier [{be:6s}]: "
-          f"{(time.perf_counter() - t0)*1e3:6.1f} ms "
-          f"({len(out['key'])} suppliers)")
-assert revenues["interp"].tobytes() == revenues["numpy"].tobytes() \
-    == revenues["jax"].tobytes()
+    out = q1_pricing_summary(s_be.store, lds.set_name, session=s_be).collect()
+    q1_results[be] = out
+    print(f"  TPC-H Q1 [{be:6s}]: {(time.perf_counter() - t0)*1e3:6.1f} ms "
+          f"({len(out['count_order'])} groups x {len(out)} columns)")
+for be in ("numpy", "jax"):
+    for c in q1_results["interp"]:
+        assert (np.asarray(q1_results[be][c]).tobytes()
+                == np.asarray(q1_results["interp"][c]).tobytes()), (be, c)
 print("  all three expression backends byte-identical")
+g0 = {c: np.asarray(v)[0] for c, v in q1_results["jax"].items()}
+print(f"  group ({g0['returnflag'].decode()},{g0['linestatus'].decode()}): "
+      f"sum_qty={g0['sum_qty']:.0f} avg_disc={g0['avg_disc']:.4f} "
+      f"count={g0['count_order']}")
 
 # volcano (record-at-a-time) comparison at reduced scale
 small_cust, small_lines, _, small_parts = denormalized_tpch(80, seed=4)

@@ -20,12 +20,13 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core import Executor, Session, make_lambda
+from repro.core import Executor, Session, agg, make_lambda
 from repro.objectmodel.schema import (Record, S, f64, i32, i64, record,
                                       vector)
 
-__all__ = ["Customer", "Lineitem", "custset_schema",
-           "customers_per_supplier", "topk_jaccard", "load_tpch"]
+__all__ = ["Customer", "Lineitem", "LineitemQ1", "custset_schema",
+           "customers_per_supplier", "topk_jaccard", "load_tpch",
+           "q1_pricing_summary"]
 
 
 class Customer(Record):
@@ -43,6 +44,58 @@ class Lineitem(Record):
     partkey: i64
     qty: i32
     price: f64
+
+
+class LineitemQ1(Record):
+    """Lineitem with the Q1 pricing columns (matches
+    ``data.synthetic.tpch_q1_lineitems``); ``shipdate`` is days since
+    epoch."""
+    returnflag: S(1)
+    linestatus: S(1)
+    qty: f64
+    extendedprice: f64
+    discount: f64
+    tax: f64
+    shipdate: i32
+
+
+def q1_pricing_summary(store, lineitems_set: str, *,
+                       ship_cutoff: int = 9400,
+                       num_partitions=None, executor_cls=None,
+                       session: Optional[Session] = None):
+    """TPC-H Q1 (pricing summary report) as ONE ``group_by().agg()`` query
+    — the shape the paper's AggregateComp benchmarks exercise, now with
+    every aggregate column in a single pass::
+
+        SELECT l_returnflag, l_linestatus,
+               SUM(l_quantity), SUM(l_extendedprice),
+               SUM(l_extendedprice*(1-l_discount)),
+               SUM(l_extendedprice*(1-l_discount)*(1+l_tax)),
+               AVG(l_quantity), AVG(l_extendedprice), AVG(l_discount),
+               COUNT(*)
+        FROM lineitem WHERE l_shipdate <= :cutoff
+        GROUP BY l_returnflag, l_linestatus
+
+    Returns the (lazy) grouped dataset — typed under the synthesized
+    group schema — so callers can ``collect()``, ``explain()``, or chain
+    further. The filter fuses with the key/value extraction into one
+    compiled stage per backend; on ``expr_backend="jax"`` the
+    pre-aggregation runs as a fused on-device segment reduction."""
+    sess = _session_for(store, num_partitions, executor_cls, session)
+    return (sess.read(lineitems_set, LineitemQ1)
+            .filter(lambda l, _c=ship_cutoff: l.shipdate <= _c)
+            .group_by("returnflag", "linestatus")
+            .agg(sum_qty=agg.sum("qty"),
+                 sum_base_price=agg.sum("extendedprice"),
+                 sum_disc_price=agg.sum(
+                     lambda l: l.extendedprice * (1 - l.discount)),
+                 sum_charge=agg.sum(
+                     lambda l: l.extendedprice * (1 - l.discount)
+                     * (1 + l.tax)),
+                 avg_qty=agg.mean("qty"),
+                 avg_price=agg.mean("extendedprice"),
+                 avg_disc=agg.mean("discount"),
+                 count_order=agg.count()))
 
 
 def custset_schema(n_parts: int) -> type:

@@ -1,0 +1,36 @@
+"""Version-tolerant jax accessors.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the
+top-level ``jax.shard_map`` namespace (renaming ``check_rep`` to
+``check_vma`` on the way), and ``jax.lax.axis_size`` only exists on newer
+builds; this environment's jax (0.4.x) has neither new spelling. Import
+from here so every shard_map program — the engine's explicit-collective
+aggregation/pipeline paths, the MoE expert-parallel dispatch, and the
+multi-device tests — runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5: experimental namespace + check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+try:
+    axis_size = jax.lax.axis_size
+except AttributeError:  # jax < 0.5
+    def axis_size(axis_name) -> int:
+        """Static size of a named mapped axis (shard_map/pmap body):
+        ``jax.core.axis_frame`` returns the size itself on 0.4.x (an
+        AxisEnvFrame with ``.size`` on some point releases)."""
+        frame = jax.core.axis_frame(axis_name)
+        return getattr(frame, "size", frame)

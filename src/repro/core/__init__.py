@@ -27,11 +27,13 @@ from repro.core.optimizer import (OptimizerReport, dead_column_elimination,
 from repro.core.physical import PhysicalPlan, estimate_bytes, plan_physical
 from repro.core.executor import ExecStats, Executor, NaiveExecutor
 from repro.core.planner import ShardingPlan, make_plan
-from repro.core.dataset import Dataset
+from repro.core.aggregates import AGG_KINDS, AggTerm, agg
+from repro.core.dataset import Dataset, GroupedDataset
 from repro.core.session import Session
 
 __all__ = [
-    "Dataset", "Session", "NameScope", "default_scope",
+    "Dataset", "GroupedDataset", "Session", "NameScope", "default_scope",
+    "AGG_KINDS", "AggTerm", "agg",
     "structural_signature",
     "EXPR_BACKENDS", "FusedStage", "build_steps", "kernel_cache_info",
     "reset_kernel_cache", "TypedLambdaArg", "UnknownColumnError",

@@ -12,16 +12,28 @@ FILTER ops copy *all* live columns through (paper: vectors are
 shallow-copied); dead-column elimination prunes the unused ones afterwards —
 this is what lets redundant-APPLY elimination work across filters, as in the
 paper's getSalary() example.
+
+Grouped aggregations lower to one generalized AGG op: key-term columns plus
+one accumulator column per sum/min/max output, a summed int64 constant-one
+for ``count``, and a sum+count pair for ``mean`` (divided only at finalize,
+after the partial-map shuffle — CSE merges the shared subterms and constant
+columns across outputs). An AGG's multi-column result feeds OUTPUT
+directly (named result columns); any other consumer first gets a ``pack``
+APPLY assembling the columns into one structured record column, which is
+what lets chains continue off grouped results.
 """
 from __future__ import annotations
 
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from repro.core.aggregates import AGG_KINDS
 from repro.core.computations import (AggregateComp, Computation, JoinComp,
                                      MultiSelectionComp, ScanSet,
                                      SelectionComp, TopKComp, WriteSet)
-from repro.core.lambdas import LambdaArg, LambdaTerm, TypedLambdaArg
+from repro.core.lambdas import LambdaArg, LambdaTerm, TypedLambdaArg, constant
 from repro.core.tcap import TCAPOp, TCAPProgram
 
 __all__ = ["compile_graph"]
@@ -132,6 +144,25 @@ def compile_graph(sink: Computation) -> TCAPProgram:
         memo[id(comp)] = out
         return out
 
+    def record_stream(comp_name: str, lst: str, cols: Tuple[str, ...]
+                      ) -> Tuple[str, str]:
+        """The single record column a downstream computation consumes.
+
+        Grouped aggregations produce multi-column vector lists (key fields
+        + named aggregate fields); chaining a Selection/Join/Agg/TopK off
+        one packs those columns into one structured record column first —
+        an elementwise ``pack`` APPLY whose field order is the AGG output
+        order, matching the synthesized group schema."""
+        if len(cols) == 1:
+            return lst, cols[0]
+        out = namer.vlist("Pck")
+        col = f"pack_{out}"
+        prog.append(TCAPOp(out=out, out_cols=(col,), op="APPLY",
+                           in_list=lst, apply_cols=cols, copy_cols=(),
+                           comp=comp_name, stage="pack",
+                           info={"type": "pack", "fields": ",".join(cols)}))
+        return out, col
+
     def _compile_one(comp: Computation) -> Tuple[str, Tuple[str, ...]]:
         if isinstance(comp, ScanSet):
             lst = namer.vlist("In")
@@ -143,8 +174,7 @@ def compile_graph(sink: Computation) -> TCAPProgram:
             return lst, (col,)
 
         if isinstance(comp, (SelectionComp, MultiSelectionComp)):
-            in_list, in_cols = rec(comp.inputs[0])
-            in_col = in_cols[0]
+            in_list, in_col = record_stream(comp.name, *rec(comp.inputs[0]))
             arg = _arg_for(comp.inputs[0], 0, in_col)
             em = _Emitter(prog, namer, comp.name)
             s = _Stream(in_list, (in_col,))
@@ -166,24 +196,74 @@ def compile_graph(sink: Computation) -> TCAPProgram:
             return _compile_join(comp)
 
         if isinstance(comp, AggregateComp):
-            in_list, in_cols = rec(comp.inputs[0])
-            in_col = in_cols[0]
+            in_list, in_col = record_stream(comp.name, *rec(comp.inputs[0]))
             arg = _arg_for(comp.inputs[0], 0, in_col)
             em = _Emitter(prog, namer, comp.name)
             s = _Stream(in_list, (in_col,))
             slot_cols = {0: in_col}
-            kcol = em.emit(comp.get_key_projection(arg), s, slot_cols)
-            vcol = em.emit(comp.get_value_projection(arg), s, slot_cols)
+            key_names = tuple(comp.key_names)
+            key_terms = comp.get_key_projections(arg)
+            if len(key_terms) != len(key_names):
+                raise ValueError(
+                    f"{comp.name}: {len(key_terms)} key projections for "
+                    f"{len(key_names)} key_names {key_names}")
+            kcols = tuple(em.emit(t, s, slot_cols) for t in key_terms)
+            # lower each named output onto accumulator columns: one per
+            # sum/min/max, a summed int64 constant-one for count, and the
+            # sum+count composite for mean (divided only at finalize, after
+            # the partial-map shuffle merge — partial means never exist).
+            acc_cols: List[str] = []
+            combiners: List[str] = []
+            finalize: List[str] = []
+            out_names: List[str] = []
+            for out_name, kind, term in comp.get_aggregates(arg):
+                if kind not in AGG_KINDS:
+                    raise ValueError(f"{comp.name}: unknown aggregate kind "
+                                     f"{kind!r} for output {out_name!r}")
+                out_names.append(out_name)
+                if kind == "count":
+                    acc_cols.append(em.emit(constant(np.int64(1)), s,
+                                            slot_cols))
+                    combiners.append("sum")
+                    finalize.append(str(len(acc_cols) - 1))
+                elif kind == "mean":
+                    acc_cols.append(em.emit(term, s, slot_cols))
+                    combiners.append("sum")
+                    acc_cols.append(em.emit(constant(np.int64(1)), s,
+                                            slot_cols))
+                    combiners.append("sum")
+                    finalize.append(f"{len(acc_cols) - 2}/"
+                                    f"{len(acc_cols) - 1}")
+                else:
+                    acc_cols.append(em.emit(term, s, slot_cols))
+                    combiners.append(kind)
+                    finalize.append(str(len(acc_cols) - 1))
+            out_cols = (*key_names, *out_names)
+            if len(set(out_cols)) != len(out_cols):
+                raise ValueError(f"{comp.name}: key and aggregate output "
+                                 f"names must be distinct, got {out_cols}")
+            if not out_names:
+                raise ValueError(f"{comp.name}: at least one aggregate "
+                                 "output is required")
             out = namer.vlist("Agg")
-            prog.append(TCAPOp(out=out, out_cols=("key", "value"), op="AGG",
-                               in_list=s.lst, apply_cols=(kcol, vcol),
+            # "out" records the user-facing result column names: column
+            # names are canonicalized away by structural_signature, but AGG
+            # output names are semantic (they name the collected columns),
+            # so they must distinguish otherwise-identical plans in the
+            # session plan cache.
+            prog.append(TCAPOp(out=out, out_cols=out_cols, op="AGG",
+                               in_list=s.lst,
+                               apply_cols=(*kcols, *acc_cols),
                                copy_cols=(), comp=comp.name, stage="agg",
-                               info={"type": "agg", "combiner": comp.combiner}))
-            return out, ("key", "value")
+                               info={"type": "agg",
+                                     "nkeys": str(len(kcols)),
+                                     "combiners": ",".join(combiners),
+                                     "finalize": ",".join(finalize),
+                                     "out": ",".join(out_cols)}))
+            return out, out_cols
 
         if isinstance(comp, TopKComp):
-            in_list, in_cols = rec(comp.inputs[0])
-            in_col = in_cols[0]
+            in_list, in_col = record_stream(comp.name, *rec(comp.inputs[0]))
             arg = _arg_for(comp.inputs[0], 0, in_col)
             em = _Emitter(prog, namer, comp.name)
             s = _Stream(in_list, (in_col,))
@@ -202,9 +282,9 @@ def compile_graph(sink: Computation) -> TCAPProgram:
 
     def _compile_join(comp: JoinComp) -> Tuple[str, Tuple[str, ...]]:
         n = comp.arity
-        sides = [rec(c) for c in comp.inputs]
-        side_streams = [_Stream(lst, cols) for (lst, cols) in sides]
-        record_col = {i: sides[i][1][0] for i in range(n)}
+        sides = [record_stream(comp.name, *rec(c)) for c in comp.inputs]
+        side_streams = [_Stream(lst, (col,)) for (lst, col) in sides]
+        record_col = {i: sides[i][1] for i in range(n)}
         args = [_arg_for(comp.inputs[i], i, record_col[i])
                 for i in range(n)]
         sel = comp.get_selection(*args)

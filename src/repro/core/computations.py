@@ -149,23 +149,60 @@ class JoinComp(Computation):
 
 
 class AggregateComp(Computation):
-    """Aggregation: per-record (key, value) extraction + an associative
-    combiner, executed with PC's two-stage distributed plan (pre-aggregate →
-    shuffle-by-key-hash → final aggregate)."""
+    """Grouped aggregation: per-record key-tuple extraction + a list of
+    named value projections with per-output combiners, executed with PC's
+    two-stage distributed plan (pre-aggregate into packed multi-column
+    combiner pages → shuffle partials by key hash → final merge + finalize).
+
+    Two subclassing surfaces:
+
+    * **legacy single-output** — override :meth:`get_key_projection` /
+      :meth:`get_value_projection` (one key, one value, ``combiner=`` from
+      the constructor); the multi-output defaults below wrap them, so every
+      pre-existing subclass compiles unchanged to the generalized AGG op
+      with key column ``key`` and output column ``value``;
+    * **canonical multi-output** — set :attr:`key_names` and override
+      :meth:`get_key_projections` (one term per key name) and
+      :meth:`get_aggregates` (``(name, kind, term)`` triples; ``kind`` from
+      :data:`~repro.core.aggregates.AGG_KINDS`, ``term`` is ``None`` for
+      ``count``). This is what the fluent ``group_by().agg()`` synthesizes.
+    """
+
+    #: output column names of the grouping key(s), in key-projection order
+    key_names: Tuple[str, ...] = ("key",)
 
     def __init__(self, name: Optional[str] = None,
                  combiner: str = "sum",
                  scope: Optional[NameScope] = None):
         super().__init__(name, scope)
-        self.combiner = combiner  # sum | max | min (associative, vectorized)
+        if combiner not in ("sum", "max", "min", "mean"):
+            raise ValueError(f"unknown combiner {combiner!r} "
+                             "(expected sum|max|min|mean)")
+        self.combiner = combiner  # legacy single-output combiner
 
-    @abc.abstractmethod
+    # ------------------------------------------------ legacy single API
     def get_key_projection(self, arg: LambdaArg) -> LambdaTerm:
-        ...
+        raise NotImplementedError(
+            f"{type(self).__name__} must override get_key_projection "
+            "(legacy API) or get_key_projections (multi-key API)")
 
-    @abc.abstractmethod
     def get_value_projection(self, arg: LambdaArg) -> LambdaTerm:
-        ...
+        raise NotImplementedError(
+            f"{type(self).__name__} must override get_value_projection "
+            "(legacy API) or get_aggregates (multi-output API)")
+
+    # -------------------------------------------- canonical multi API
+    def get_key_projections(self, arg: LambdaArg) -> List[LambdaTerm]:
+        """One term per entry of :attr:`key_names`; the default delegates
+        to the legacy single-key projection."""
+        return [self.get_key_projection(arg)]
+
+    def get_aggregates(self, arg: LambdaArg
+                       ) -> List[Tuple[str, str, Optional[LambdaTerm]]]:
+        """``(output name, aggregate kind, value term)`` triples; ``term``
+        is ``None`` only for ``count``. The default delegates to the legacy
+        single-value projection under the constructor's combiner."""
+        return [("value", self.combiner, self.get_value_projection(arg))]
 
 
 class TopKComp(Computation):

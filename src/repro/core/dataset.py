@@ -2,8 +2,9 @@
 as a chainable front-end.
 
 A :class:`Dataset` is an immutable description of a query: each chain method
-(``filter`` / ``select`` / ``flat_map`` / ``join`` / ``aggregate`` /
-``top_k`` / ``write``) returns a new handle holding one more plan node.
+(``filter`` / ``select`` / ``flat_map`` / ``join`` / ``group_by(...).agg`` /
+``aggregate`` / ``top_k`` / ``write``) returns a new handle holding one more
+plan node.
 Nothing runs until a terminal — ``collect()`` / ``to_numpy()`` — at which
 point the owning :class:`~repro.core.session.Session` synthesizes the
 corresponding :class:`~repro.core.computations.Computation` subclass graph,
@@ -39,6 +40,7 @@ from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.aggregates import AggTerm, agg
 from repro.core.computations import (AggregateComp, Computation, JoinComp,
                                      MultiSelectionComp, ScanSet,
                                      SelectionComp, TopKComp, WriteSet)
@@ -46,9 +48,11 @@ from repro.core.lambdas import (LambdaArg, LambdaTerm, TypedLambdaArg,
                                 UnknownColumnError, constant, make_lambda,
                                 make_lambda_from_member,
                                 make_lambda_from_self)
-from repro.objectmodel.schema import pair_field_map, pair_schema
+from repro.core.relops import sum_acc_dtype
+from repro.objectmodel.schema import (Field, group_schema, pair_field_map,
+                                      pair_schema)
 
-__all__ = ["Dataset"]
+__all__ = ["Dataset", "GroupedDataset"]
 
 LambdaSpec = Union[str, Callable[..., LambdaTerm], None]
 
@@ -152,11 +156,11 @@ class _Join:
 
 
 @dataclasses.dataclass(frozen=True)
-class _Aggregate:
+class _GroupedAgg:
     parent: Any
-    key: LambdaSpec
-    value: LambdaSpec
-    combiner: str
+    keys: Tuple[Tuple[str, Any], ...]  # (output column name, lambda spec)
+    outs: Tuple[Tuple[str, AggTerm], ...]  # (output column name, aggregate)
+    schema: Optional[type] = None  # synthesized group schema, when typed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,8 +174,9 @@ class _TopK:
 def _node_schema(node) -> Optional[type]:
     """The record schema of a plan node's output, when statically known:
     filters preserve it, identity selects preserve it, the default join
-    projection introduces the pair schema; projections through arbitrary
-    lambdas yield fresh (unknown) record types."""
+    projection introduces the pair schema, grouped aggregations introduce
+    their synthesized group schema; projections through arbitrary lambdas
+    yield fresh (unknown) record types."""
     if isinstance(node, _Scan):
         return node.schema
     if isinstance(node, _Filter):
@@ -180,7 +185,59 @@ def _node_schema(node) -> Optional[type]:
         return _node_schema(node.parent) if node.proj is None else None
     if isinstance(node, _Join):
         return node.schema
+    if isinstance(node, _GroupedAgg):
+        return node.schema
     return None
+
+
+def _spec_result(spec: LambdaSpec, schema) -> Optional[np.ndarray]:
+    """Evaluate a lambda spec over zero rows of a typed parent — the same
+    zero-row dtype propagation the stage compiler uses — to learn the
+    result dtype/inner shape for group-schema synthesis. ``None`` when the
+    dtype cannot be determined (untyped parent, natives that reject empty
+    input, non-packable dtypes)."""
+    if schema is None:
+        return None
+    try:
+        term = _as_term(spec, TypedLambdaArg(0, schema))
+        with np.errstate(all="ignore"):
+            val = np.asarray(term.evaluate({0: np.zeros(0, schema.dtype)}))
+        return val if val.dtype.kind in "biufSU" else None
+    except UnknownColumnError:
+        raise
+    except Exception:
+        return None
+
+
+def _group_fields(schema, keys, outs) -> Optional[dict]:
+    """Field layout of a grouped-aggregation result — key fields then the
+    named aggregate fields, dtyped by the combiner rules shared with
+    :mod:`repro.core.relops` (sum via :func:`~repro.core.relops
+    .sum_acc_dtype` — int dtypes kept, floats and bools widened; min/max
+    accumulate f64, count is i64, mean is f64). ``None`` when any
+    column's dtype cannot be determined statically (the result dataset is
+    then untyped; columns keep their names either way)."""
+    fields: dict = {}
+    for name, spec in keys:
+        val = _spec_result(spec, schema)
+        if val is None:
+            return None
+        fields[name] = Field(val.dtype, val.shape[1:])
+    for name, term in outs:
+        if term.kind == "count":
+            fields[name] = Field(np.int64)
+            continue
+        val = _spec_result(term.spec, schema)
+        if val is None or val.dtype.kind not in "biuf":
+            return None
+        if term.kind == "sum":
+            dt = sum_acc_dtype(val.dtype)
+        elif term.kind in ("min", "max", "mean"):
+            dt = np.dtype(np.float64)
+        else:  # pragma: no cover - kinds validated by AggTerm
+            return None
+        fields[name] = Field(dt, val.shape[1:])
+    return fields
 
 
 class Dataset:
@@ -277,13 +334,62 @@ class Dataset:
         return self._derive(_Join(self._node, other._node, on, project,
                                   schema=pair))
 
+    def group_by(self, *keys: LambdaSpec) -> "GroupedDataset":
+        """Declarative grouped aggregation: ``ds.group_by(k1, k2).agg(
+        total=agg.sum(expr), n=agg.count(), ...)``.
+
+        Each key is a column name (the output key column keeps that name)
+        or a lambda construction function (named ``key``/``key<i>``); the
+        named aggregates come from the :class:`~repro.core.aggregates.agg`
+        factories. The result is one row per distinct key tuple with the
+        key columns followed by the named aggregate columns — typed under
+        a synthesized group schema when the dtypes are statically known,
+        so ``filter``/``top_k``/``join`` chain off grouped results."""
+        if not keys:
+            raise ValueError(
+                "group_by() needs at least one key (for a global aggregate "
+                "use a constant key, e.g. group_by(lambda r: constant(0)))")
+        named = []
+        for i, k in enumerate(keys):
+            if isinstance(k, str):
+                name = k
+            else:
+                if not callable(k):
+                    raise TypeError(f"group_by() keys are column names or "
+                                    f"lambda construction functions, got "
+                                    f"{k!r}")
+                name = "key" if len(keys) == 1 else f"key{i}"
+            named.append((name, k))
+            _validate_spec(k, (self.schema,))
+        names = [n for n, _ in named]
+        if len(set(names)) != len(names):
+            raise ValueError(f"group_by() key names must be distinct, "
+                             f"got {names}")
+        return GroupedDataset(self, tuple(named))
+
     def aggregate(self, key: LambdaSpec, value: LambdaSpec,
                   combiner: str = "sum") -> "Dataset":
-        """Two-stage distributed aggregation: per-record (key, value)
-        extraction + an associative combiner (``sum``/``max``/``min``)."""
+        """Two-stage distributed aggregation (legacy single-output form):
+        per-record (key, value) extraction + an associative combiner
+        (``sum``/``max``/``min``/``mean``), output columns ``key`` and
+        ``value``. A thin compatibility wrapper over the generalized
+        :meth:`group_by` path — both lower to the same multi-aggregate
+        AGG plan."""
         _validate_spec(key, (self.schema,))
         _validate_spec(value, (self.schema,))
-        return self._derive(_Aggregate(self._node, key, value, combiner))
+        return self._grouped_agg((("key", key),),
+                                 (("value", AggTerm(combiner, value)),))
+
+    def _grouped_agg(self, keys, outs) -> "Dataset":
+        schema = None
+        fields = _group_fields(self.schema, keys, outs)
+        if fields is not None:
+            try:
+                schema = group_schema(fields)
+            except Exception:
+                schema = None
+        return self._derive(_GroupedAgg(self._node, tuple(keys),
+                                        tuple(outs), schema=schema))
 
     def top_k(self, k: int, score: LambdaSpec,
               payload: LambdaSpec) -> "Dataset":
@@ -342,6 +448,49 @@ class Dataset:
             sink.set_input(comp)
             self._sink = sink
         return self._sink
+
+
+class GroupedDataset:
+    """The intermediate handle of :meth:`Dataset.group_by`: holds the key
+    specs, waiting for :meth:`agg` to name the aggregate outputs."""
+
+    def __init__(self, ds: Dataset, keys: Tuple[Tuple[str, Any], ...]):
+        self._ds = ds
+        self._keys = keys
+
+    @property
+    def key_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self._keys)
+
+    def agg(self, **outputs: AggTerm) -> Dataset:
+        """Named multi-aggregate outputs over the grouped keys::
+
+            ds.group_by("returnflag", "linestatus").agg(
+                sum_qty=agg.sum("qty"),
+                avg_disc=agg.mean("discount"),
+                n=agg.count())
+
+        Every output is an :class:`~repro.core.aggregates.AggTerm` from
+        the ``agg`` factories; value specs are column names or lambda
+        construction functions, validated against the schema here — at the
+        chain call."""
+        if not outputs:
+            raise ValueError("agg() needs at least one named aggregate, "
+                             "e.g. agg(total=agg.sum('price'))")
+        ds = self._ds
+        key_names = set(self.key_names)
+        for name, term in outputs.items():
+            if not isinstance(term, AggTerm):
+                raise TypeError(
+                    f"agg({name}=...) takes an AggTerm from the agg "
+                    f"factories (agg.sum/min/max/mean/count), got {term!r}")
+            if name in key_names:
+                raise ValueError(
+                    f"agg() output {name!r} collides with a group_by key "
+                    f"name {sorted(key_names)}")
+            if term.kind != "count":
+                _validate_spec(term.spec, (ds.schema,))
+        return ds._grouped_agg(self._keys, tuple(outputs.items()))
 
 
 # ----------------------------------------------------- graph synthesis
@@ -419,20 +568,27 @@ def _synthesize(sess, node) -> Computation:
         comp.output_schema = node.schema  # pair schema (default projection)
         return comp
 
-    if isinstance(node, _Aggregate):
+    if isinstance(node, _GroupedAgg):
         upstream = _synthesize(sess, node.parent)
-        key, value = node.key, node.value
+        keys, outs = node.keys, node.outs
 
-        class _FluentAggregate(AggregateComp):
-            def get_key_projection(self, arg):
-                return _as_term(key, arg)
+        class _FluentGroupedAgg(AggregateComp):
+            key_names = tuple(n for n, _ in keys)
 
-            def get_value_projection(self, arg):
-                return _as_term(value, arg)
+            def get_key_projections(self, arg):
+                return [_as_term(spec, arg) for _, spec in keys]
 
-        comp = _FluentAggregate(name=scope.fresh("Aggregate"), scope=scope,
-                                combiner=node.combiner)
+            def get_aggregates(self, arg):
+                return [(name, t.kind,
+                         None if t.kind == "count"
+                         else _as_term(t.spec, arg))
+                        for name, t in outs]
+
+        comp = _FluentGroupedAgg(name=scope.fresh("Aggregate"), scope=scope)
         comp.set_input(upstream)
+        # grouped results stay typed under the synthesized group schema,
+        # so downstream chains resolve columns at graph-build time
+        comp.output_schema = node.schema
         return comp
 
     if isinstance(node, _TopK):

@@ -12,7 +12,8 @@ distributed semantics are simulated with P logical partitions on one host:
 
 The per-partition operator kernels live in :mod:`repro.core.relops` and are
 shared verbatim with the distributed worker runtime (:mod:`repro.dist`);
-this module only decides partition *placement* (round-robin pages) and
+this module only decides partition *placement* (greedy least-loaded pages,
+shared with ``dist.placement``) and
 simulates the *exchange* in-process. The real exchange — page-serialized
 transfers between workers — is :class:`repro.dist.driver
 .DistributedExecutor`, which runs the same kernels.
@@ -34,9 +35,11 @@ from repro.core.computations import Computation
 from repro.core.exprc import EXPR_BACKENDS, FusedStage, build_steps
 from repro.core.optimizer import OptimizerReport, optimize
 from repro.core.physical import PhysicalPlan, plan_physical
-from repro.core.relops import (AggMap, assemble_output, batch_kernel,
-                               batch_topk, bytes_of, concat_batches,
-                               merge_topk, probe_join, split_by_hash)
+from repro.core.relops import (AggMap, AggSpec, assemble_output,
+                               batch_kernel, batch_topk, bytes_of,
+                               concat_batches, device_segment_reducer,
+                               greedy_page_placement, merge_topk,
+                               probe_join, split_by_hash)
 from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.objectmodel.store import PagedStore
 from repro.objectmodel.vectorlist import VectorList
@@ -142,12 +145,17 @@ class Executor:
         s = self.store.get_set(op.info["set"])
         parts: List[List[VectorList]] = [[] for _ in range(self.P)]
         col = op.out_cols[0]
+        # skew-aware placement, identical to the distributed runtime's
+        # (dist.placement shares this helper): least-loaded-by-bytes,
+        # degenerating to round-robin for equal-size pages
+        dest = greedy_page_placement(
+            [c * s.dtype.itemsize for c in s.counts], self.P)
         for i, page_records in enumerate(s.scan()):
             self.stats.pages_scanned += 1
             self.stats.rows_scanned += len(page_records)
             for j in range(0, len(page_records), self.vector_rows):
                 batch = page_records[j: j + self.vector_rows]
-                parts[i % self.P].append(VectorList({col: batch}))
+                parts[dest[i]].append(VectorList({col: batch}))
         return parts
 
     def _map_batches(self, parts, fn) -> List[List[VectorList]]:
@@ -191,23 +199,28 @@ class Executor:
 
     # -------------------------------------------------------------- agg
     def _aggregate(self, op: TCAPOp, parts) -> List[List[VectorList]]:
-        kcol, vcol = op.apply_cols
-        combiner = op.info.get("combiner", "sum")
-        # stage 1: per-partition pre-aggregation (combiner pages)
+        spec = AggSpec.from_op(op)
+        kcols, acols = spec.key_cols(op), spec.acc_cols(op)
+        # the jax backend pre-aggregates on device: one fused segment-
+        # reduce kernel per batch over all accumulator columns
+        reducer = (device_segment_reducer(spec.combiners)
+                   if self.expr_backend == "jax" else None)
+        # stage 1: per-partition pre-aggregation (combiner pages), one
+        # absorb over the partition's concatenated rows (AggMap
+        # .absorb_batches — shared with the worker runtime, which is what
+        # keeps the float association order identical across backends)
         partials = []
         for batches in parts:
-            m = AggMap(combiner)
-            for vl in batches:
-                m.absorb(np.asarray(vl[kcol]), np.asarray(vl[vcol]))
+            m = AggMap(spec)
+            m.absorb_batches(batches, kcols, acols, reducer=reducer)
             partials.append(m)
-        # shuffle partials by key hash, final aggregate per partition
-        finals = [AggMap(combiner) for _ in range(self.P)]
+        # shuffle partials by key hash, final merge + finalize per partition
+        finals = [AggMap(spec) for _ in range(self.P)]
         for m in partials:
             split = m.split_by_key_hash(self.P)
             for p in range(self.P):
                 if split[p].data:
-                    self.stats.shuffle_bytes += sum(
-                        np.asarray(v).nbytes for v in split[p].data.values())
+                    self.stats.shuffle_bytes += split[p].nbytes()
                     finals[p].merge(split[p])
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p, m in enumerate(finals):

@@ -41,7 +41,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.lambdas import METHOD_REGISTRY, _APPLY_BINOP as _NP_BINOP
-from repro.core.relops import hash_col
+from repro.core.relops import hash_col, reset_segment_kernels
 from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.objectmodel.vectorlist import VectorList
 
@@ -247,6 +247,9 @@ def reset_kernel_cache() -> None:
     with _KLOCK:
         _KCACHE.clear()
         _KSTATS.update(hits=0, misses=0, evictions=0)
+    # the device segment-reduce kernels (relops) are part of the same
+    # compiled-kernel surface: reset them together
+    reset_segment_kernels()
 
 
 class FusedStage:

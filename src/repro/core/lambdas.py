@@ -208,18 +208,32 @@ class LambdaTerm:
     def __invert__(self):
         return LambdaTerm("bool", [self], {"op": "!"})
 
-    # arithmetic
+    # arithmetic (reflected forms lift the python scalar to a constant
+    # term, so e.g. ``1 - l.discount`` builds the same tree shape as
+    # ``constant(1) - l.discount``)
     def __add__(self, other):
         return self._binary(other, "arith", "+")
+
+    def __radd__(self, other):
+        return constant(other)._binary(self, "arith", "+")
 
     def __sub__(self, other):
         return self._binary(other, "arith", "-")
 
+    def __rsub__(self, other):
+        return constant(other)._binary(self, "arith", "-")
+
     def __mul__(self, other):
         return self._binary(other, "arith", "*")
 
+    def __rmul__(self, other):
+        return constant(other)._binary(self, "arith", "*")
+
     def __truediv__(self, other):
         return self._binary(other, "arith", "/")
+
+    def __rtruediv__(self, other):
+        return constant(other)._binary(self, "arith", "/")
 
     __hash__ = object.__hash__  # __eq__ is overloaded; identity hashing
 

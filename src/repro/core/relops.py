@@ -19,7 +19,13 @@ Kernels:
   kernel: what goes on the wire is decided here, identically for the
   simulated and the real exchange);
 * :func:`probe_join` — sort-probe equi-join of two co-partitioned sides;
-* :class:`AggMap` — PC's pre-aggregation map (a "combiner page");
+* :class:`AggMap` — PC's pre-aggregation map (a "combiner page"),
+  generalized to multi-column keys and named multi-aggregate accumulators
+  (:class:`AggSpec` parses the AGG op's plan); on the jax expression
+  backend the per-batch reduction runs on device through
+  :func:`device_segment_reducer` (one fused segment-reduce kernel);
+* :func:`greedy_page_placement` — least-loaded-by-bytes page placement,
+  shared by the local scan partitioner and ``dist.placement``;
 * :func:`batch_topk` / :func:`merge_topk` — per-partition top-k and the
   global gather-merge;
 * :func:`assemble_output` — the OUTPUT contract (column concat in
@@ -28,6 +34,8 @@ Kernels:
 """
 from __future__ import annotations
 
+import threading
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -37,8 +45,9 @@ from repro.core.tcap import TCAPOp
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = [
-    "AggMap", "assemble_output", "batch_kernel", "batch_topk", "bytes_of",
-    "concat_batches", "hash_col", "merge_topk", "probe_join",
+    "AggMap", "AggSpec", "assemble_output", "batch_kernel", "batch_topk",
+    "bytes_of", "concat_batches", "device_segment_reducer",
+    "greedy_page_placement", "hash_col", "merge_topk", "probe_join",
     "split_by_hash", "stage_eval",
 ]
 
@@ -71,6 +80,17 @@ def stage_eval(op: TCAPOp, cols: Sequence[np.ndarray],
         return np.full(n, op.info["value"])
     if t == "rename":
         return cols[0]
+    if t == "pack":
+        # grouped-aggregation outputs chained into a downstream op: pack
+        # the named columns into one structured record column, field order
+        # = AGG output order (matches the synthesized group schema)
+        names = op.info["fields"].split(",")
+        arrs = [np.asarray(c) for c in cols]
+        rec = np.zeros(len(arrs[0]), np.dtype(
+            [(nm, a.dtype, a.shape[1:]) for nm, a in zip(names, arrs)]))
+        for nm, a in zip(names, arrs):
+            rec[nm] = a
+        return rec
     if t in ("cmp", "bool", "arith"):
         o = op.info["op"]
         if o == "!":
@@ -171,12 +191,30 @@ _COMBINE = {
                                                      np.minimum),
 }
 
+# pairwise merge of two accumulated values (map-merge and wire-merge path)
+_MERGE2 = {
+    "sum": lambda a, b: a + b,
+    "max": np.maximum,
+    "min": np.minimum,
+}
+
+
+def sum_acc_dtype(dtype: np.dtype) -> np.dtype:
+    """Accumulator dtype of a ``sum`` over values of ``dtype``: floats
+    widen to float64, bools widen to int64 (summing an indicator counts
+    it — ``np.add.at`` on a bool accumulator would saturate at True),
+    other integers keep their dtype. Single source for the host scatter,
+    the device reducer, and the group-schema synthesis."""
+    if dtype.kind == "f":
+        return np.result_type(dtype, np.float64)
+    if dtype.kind == "b":
+        return np.dtype(np.int64)
+    return dtype
+
 
 def _scatter_add(acc, inv, vals, n):
     if acc is None:
-        shape = (n,) + vals.shape[1:]
-        acc = np.zeros(shape, dtype=np.result_type(vals.dtype, np.float64)
-                       if vals.dtype.kind == "f" else vals.dtype)
+        acc = np.zeros((n,) + vals.shape[1:], dtype=sum_acc_dtype(vals.dtype))
     np.add.at(acc, inv, vals)
     return acc
 
@@ -189,60 +227,328 @@ def _scatter_minmax(acc, inv, vals, n, fn):
     return acc
 
 
-class AggMap:
-    """A pre-aggregation map (the per-thread PC ``Map`` on a combiner page).
+@dataclass(frozen=True)
+class AggSpec:
+    """The parsed plan of one generalized AGG op: which output columns are
+    keys, the combiner of every accumulator column, and how accumulators
+    finalize into the named outputs (``"i"`` emits accumulator *i*;
+    ``"i/j"`` divides — the mean composite)."""
 
+    key_names: Tuple[str, ...]
+    combiners: Tuple[str, ...]
+    finalize: Tuple[str, ...]
+    out_names: Tuple[str, ...]
+
+    @classmethod
+    def from_op(cls, op: TCAPOp) -> "AggSpec":
+        nk = int(op.info["nkeys"])
+        return cls(key_names=tuple(op.out_cols[:nk]),
+                   combiners=tuple(op.info["combiners"].split(",")),
+                   finalize=tuple(op.info["finalize"].split(",")),
+                   out_names=tuple(op.out_cols[nk:]))
+
+    @property
+    def n_keys(self) -> int:
+        return len(self.key_names)
+
+    def key_cols(self, op: TCAPOp) -> Tuple[str, ...]:
+        return op.apply_cols[:self.n_keys]
+
+    def acc_cols(self, op: TCAPOp) -> Tuple[str, ...]:
+        return op.apply_cols[self.n_keys:]
+
+
+def _col_unique(c: np.ndarray):
+    """``np.unique(..., return_inverse=True)`` with a fast path for byte
+    strings: an ``S1``/``S2``/``S4``/``S8`` column sorts identically as a
+    big-endian unsigned view (lexicographic bytes == big-endian integer
+    order), and integer argsort is ~2x faster than the generic string
+    compare loop. The unique values are viewed back, so callers always
+    see the original dtype."""
+    if c.dtype.kind == "S" and c.dtype.itemsize in (1, 2, 4, 8):
+        u, inv = np.unique(c.view(f">u{c.dtype.itemsize}"),
+                           return_inverse=True)
+        return u.view(c.dtype), inv
+    return np.unique(c, return_inverse=True)
+
+
+def _unique_keys(key_cols: Sequence[np.ndarray]):
+    """(python key list, inverse index) for one partition's rows. Single
+    keys stay scalars (hash/dict identity as before); multi-column keys
+    become tuples. Multi-key grouping runs per-column integer coding — one
+    cheap ``np.unique`` per column, combined into one int64 code — which
+    is ~4x faster than a structured-array sort and yields the identical
+    lexicographic group order (the combined code sorts by (code0, code1,
+    ...) = per-column sorted order). Every backend runs exactly this
+    function, so group order is deterministic by construction. Falls back
+    to the structured sort when the code space could overflow int64."""
+    if len(key_cols) == 1:
+        uniq, inv = _col_unique(np.asarray(key_cols[0]))
+        return uniq.tolist(), inv
+    cols = [np.asarray(c) for c in key_cols]
+    uniqs, codes, space = [], [], 1
+    if all(c.ndim == 1 for c in cols):
+        for c in cols:
+            u, code = _col_unique(c)
+            uniqs.append(u)
+            codes.append(code)
+            space *= max(len(u), 1)  # python int: overflow-safe check
+    if uniqs and space < (1 << 62):
+        combined = codes[0].astype(np.int64)
+        for u, code in zip(uniqs[1:], codes[1:]):
+            combined = combined * len(u) + code
+        ucomb, inv = np.unique(combined, return_inverse=True)
+        parts = []
+        idx = ucomb
+        for u in reversed(uniqs[1:]):
+            parts.append(idx % len(u))
+            idx = idx // len(u)
+        parts.append(idx)
+        parts.reverse()
+        keys = list(zip(*(u[i].tolist() for u, i in zip(uniqs, parts))))
+        return keys, inv
+    packed = np.empty(len(cols[0]), dtype=np.dtype(
+        [(f"k{i}", c.dtype, c.shape[1:]) for i, c in enumerate(cols)]))
+    for i, c in enumerate(cols):
+        packed[f"k{i}"] = c
+    uniq, inv = np.unique(packed, return_inverse=True)
+    return uniq.tolist(), inv
+
+
+class AggMap:
+    """A pre-aggregation map (the per-thread PC ``Map`` on a combiner page),
+    generalized to multi-column keys and multiple named accumulators.
+
+    Each entry maps a key (scalar, or tuple for multi-key grouping) to the
+    list of accumulated values — one per accumulator column of the AGG op.
     Key order is insertion order everywhere (absorb batches in batch order,
     merge peers in rank order) — both executors preserve it, which is what
     keeps final AGG output ordering identical across backends.
     """
 
-    def __init__(self, combiner: str):
-        self.combiner = combiner
-        self.data: Dict[Any, Any] = {}
+    def __init__(self, spec: AggSpec):
+        self.spec = spec
+        self.data: Dict[Any, List[Any]] = {}
+        # source dtypes of the key columns, captured at first absorb and
+        # propagated through splits/merges/the wire: emit() must restore
+        # them exactly (np.array over python natives would widen i32 keys
+        # to int64 and narrow S(n) keys to the longest seen value,
+        # contradicting the synthesized group schema)
+        self.key_dtypes: Optional[List[np.dtype]] = None
 
-    def absorb(self, keys: np.ndarray, vals: np.ndarray) -> None:
-        uniq, inv = np.unique(keys, return_inverse=True)
-        acc = _COMBINE[self.combiner](None, inv, vals, len(uniq))
-        for i, k in enumerate(uniq.tolist()):
+    def absorb(self, key_cols: Sequence[np.ndarray],
+               val_cols: Sequence[np.ndarray],
+               reducer: Optional[Callable] = None) -> None:
+        """Fold one batch in: group rows by key, scatter-combine every
+        accumulator column. ``reducer`` (the jax segment-reduce kernel)
+        replaces the numpy scatter for the per-batch reduction when set;
+        it receives ``(inv, n_groups, val_arrays)`` and must return one
+        ``(n_groups, ...)`` array per accumulator — or ``None`` to decline
+        (non-numeric dtypes), falling back to numpy."""
+        if len(np.asarray(key_cols[0])) == 0:
+            return
+        if self.key_dtypes is None:
+            self.key_dtypes = [np.asarray(c).dtype for c in key_cols]
+        keys, inv = _unique_keys(key_cols)
+        n = len(keys)
+        vals = [np.asarray(v) for v in val_cols]
+        accs = reducer(inv, n, vals) if reducer is not None else None
+        if accs is None:
+            accs = [_COMBINE[comb](None, inv, v, n)
+                    for comb, v in zip(self.spec.combiners, vals)]
+        combs = self.spec.combiners
+        for i, k in enumerate(keys):
             cur = self.data.get(k)
             if cur is None:
-                self.data[k] = acc[i]
-            elif self.combiner == "sum":
-                self.data[k] = cur + acc[i]
-            elif self.combiner == "max":
-                self.data[k] = np.maximum(cur, acc[i])
+                self.data[k] = [a[i] for a in accs]
             else:
-                self.data[k] = np.minimum(cur, acc[i])
+                self.data[k] = [_MERGE2[c](old, a[i])
+                                for c, old, a in zip(combs, cur, accs)]
+
+    def absorb_batches(self, batches: Sequence[VectorList],
+                       key_cols: Sequence[str],
+                       acc_cols: Sequence[str],
+                       reducer: Optional[Callable] = None) -> None:
+        """One absorb over a partition's concatenated rows — a single
+        group discovery + one (fused, possibly on-device) scatter per
+        partition. Both executors pre-aggregate through exactly this
+        method, so the float association order (row order within the
+        partition) is identical on every backend by construction."""
+        if not batches:
+            return
+        self.absorb(
+            [np.concatenate([np.asarray(vl[c]) for vl in batches])
+             for c in key_cols],
+            [np.concatenate([np.asarray(vl[c]) for vl in batches])
+             for c in acc_cols],
+            reducer=reducer)
 
     def merge(self, other: "AggMap") -> None:
-        for k, v in other.data.items():
+        if self.key_dtypes is None:
+            self.key_dtypes = other.key_dtypes
+        combs = self.spec.combiners
+        for k, vals in other.data.items():
             cur = self.data.get(k)
             if cur is None:
-                self.data[k] = v
-            elif self.combiner == "sum":
-                self.data[k] = cur + v
-            elif self.combiner == "max":
-                self.data[k] = np.maximum(cur, v)
+                self.data[k] = vals
             else:
-                self.data[k] = np.minimum(cur, v)
+                self.data[k] = [_MERGE2[c](old, v)
+                                for c, old, v in zip(combs, cur, vals)]
 
     def split_by_key_hash(self, P: int) -> List["AggMap"]:
         """Partition this map's entries by ``hash(key) % P`` (the AGG
         shuffle kernel); insertion order is preserved within each split."""
-        out = [AggMap(self.combiner) for _ in range(P)]
+        out = [AggMap(self.spec) for _ in range(P)]
+        for m in out:
+            m.key_dtypes = self.key_dtypes
         for k, v in self.data.items():
             out[hash(k) % P].data[k] = v
         return out
 
+    def nbytes(self) -> int:
+        """Accumulator payload size (what an AGG partial puts on the wire
+        in the local simulation's accounting)."""
+        return sum(np.asarray(v).nbytes
+                   for vals in self.data.values() for v in vals)
+
     def emit(self) -> Optional[VectorList]:
         """The final AGG output batch for this partition (``None`` if the
-        partition holds no groups)."""
+        partition holds no groups): key columns, then every named output
+        finalized from its accumulator(s)."""
         if not self.data:
             return None
-        keys = np.array(list(self.data.keys()))
-        vals = np.stack([np.asarray(v) for v in self.data.values()])
-        return VectorList({"key": keys, "value": vals})
+        keys = list(self.data.keys())
+        out = VectorList()
+        dts = self.key_dtypes or [None] * self.spec.n_keys
+        if self.spec.n_keys == 1:
+            out.append(self.spec.key_names[0], np.array(keys, dtype=dts[0]))
+        else:
+            for i, kn in enumerate(self.spec.key_names):
+                out.append(kn, np.array([k[i] for k in keys],
+                                        dtype=dts[i]))
+        accs = [np.stack([np.asarray(vals[j]) for vals in
+                          self.data.values()])
+                for j in range(len(self.spec.combiners))]
+        for name, fin in zip(self.spec.out_names, self.spec.finalize):
+            if "/" in fin:
+                i, j = map(int, fin.split("/"))
+                out.append(name, accs[i] / accs[j])
+            else:
+                out.append(name, accs[int(fin)])
+        return out
+
+
+# --------------------------------------- device (jax) segment reduction
+# bounded FIFO of jitted segment kernels, keyed by (combiners, dtypes,
+# pow2 rows, pow2 segs); cleared together with the exprc kernel LRU
+# (exprc.reset_kernel_cache calls reset_segment_kernels). Lock-guarded:
+# thread-backend workers hit the reducer concurrently.
+_SEG_KERNELS: Dict[Tuple, Callable] = {}
+_SEG_KERNELS_CAP = 64
+_SEG_LOCK = threading.Lock()
+
+
+def reset_segment_kernels() -> None:
+    with _SEG_LOCK:
+        _SEG_KERNELS.clear()
+
+
+def _pow2(n: int) -> int:
+    return max(8, 1 << max(0, int(n - 1).bit_length()))
+
+
+def device_segment_reducer(combiners: Tuple[str, ...],
+                           force: bool = False) -> Optional[Callable]:
+    """The fused on-device pre-aggregation for ``expr_backend="jax"``: one
+    jitted kernel scatter-reducing every accumulator column of a partition
+    in a single call (``segment_sum``-style ``.at[inv].add/min/max`` under
+    ``enable_x64``, accumulator dtypes matching the host scatters). Group
+    discovery (``np.unique``) stays on host — it is what fixes the
+    deterministic key order — only the reduction itself runs on device.
+    Rows and segment counts are padded to power-of-two buckets
+    (out-of-range rows dropped by the scatter) so XLA retraces O(log²)
+    times, not once per partition shape.
+
+    Bit-identity with the host scatters is test-pinned where XLA lowers
+    the scatter to a sequential row-order accumulation (CPU, via the
+    forced tests below). Float scatter-add ordering on other accelerator
+    backends is XLA-implementation-defined: when enabling this path on
+    real devices, run the forced equivalence tests there first — min/max
+    and integer/count sums are order-free and always safe.
+
+    Like the physical planner's broadcast decision, the offload must win
+    on modeled cost: XLA's *CPU* scatter is ~50x slower per element than
+    ``np.add.at``, so on a CPU-only jax backend this returns ``None`` and
+    pre-aggregation stays on the host scatters (set ``force=True`` — or
+    ``REPRO_AGG_DEVICE=1`` in the environment — to offload regardless;
+    the equivalence tests do, to pin down bit-identity of the device
+    path). On an accelerator backend the device path engages by default.
+
+    The returned reducer itself returns ``None`` per call for non-numeric
+    value dtypes (caller falls back to the numpy scatter)."""
+    import os
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover - jax is a hard dep in-tree
+        return None
+    if not (force or os.environ.get("REPRO_AGG_DEVICE") == "1"):
+        try:
+            if jax.default_backend() == "cpu":
+                return None
+        except Exception:  # pragma: no cover - backend probe failed
+            return None
+
+    def reducer(inv: np.ndarray, n: int, vals: List[np.ndarray]):
+        if any(v.dtype.kind not in "biuf" or v.dtype.names is not None
+               for v in vals):
+            return None
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+        acc_dtypes = [sum_acc_dtype(v.dtype) if c == "sum"
+                      else np.dtype(np.float64)
+                      for c, v in zip(combiners, vals)]
+        rows, segs = _pow2(len(inv)), _pow2(n)
+        key = (combiners, tuple(str(d) for d in acc_dtypes),
+               tuple((str(v.dtype), v.shape[1:]) for v in vals),
+               rows, segs)
+        with _SEG_LOCK:
+            kern = _SEG_KERNELS.get(key)
+        if kern is None:
+            import jax
+
+            def _core(inv_d, *vals_d):
+                outs = []
+                for comb, v, dt in zip(combiners, vals_d, acc_dtypes):
+                    shape = (segs,) + v.shape[1:]
+                    if comb == "sum":
+                        acc = jnp.zeros(shape, dt)
+                        outs.append(acc.at[inv_d].add(
+                            v.astype(dt), mode="drop"))
+                    else:
+                        init = -jnp.inf if comb == "max" else jnp.inf
+                        acc = jnp.full(shape, init, dt)
+                        op = (acc.at[inv_d].max if comb == "max"
+                              else acc.at[inv_d].min)
+                        outs.append(op(v.astype(dt), mode="drop"))
+                return tuple(outs)
+
+            kern = jax.jit(_core)
+            with _SEG_LOCK:
+                while len(_SEG_KERNELS) >= _SEG_KERNELS_CAP:
+                    _SEG_KERNELS.pop(next(iter(_SEG_KERNELS)))
+                _SEG_KERNELS[key] = kern
+        inv_p = np.full(rows, segs, np.int64)
+        inv_p[:len(inv)] = inv
+        vals_p = []
+        for v in vals:
+            vp = np.zeros((rows,) + v.shape[1:], v.dtype)
+            vp[:len(v)] = v
+            vals_p.append(vp)
+        with enable_x64():
+            outs = kern(inv_p, *vals_p)
+        return [np.asarray(o)[:n] for o in outs]
+
+    return reducer
 
 
 # ------------------------------------------------------------------ top-k
@@ -289,6 +595,24 @@ def assemble_output(op: TCAPOp, batches: Sequence[VectorList], stats,
         if set_name not in store.sets and rec.dtype != object:
             store.send_data(set_name, rec)
     return out
+
+
+# -------------------------------------------------------------- placement
+def greedy_page_placement(page_bytes: Sequence[int], P: int) -> List[int]:
+    """Destination partition per page: each page (in storage order) goes to
+    the currently least-loaded-by-bytes partition, ties broken by lowest
+    rank. With equal-size pages this degenerates to exactly the old
+    round-robin ``i % P``; with skewed page sizes it keeps byte loads
+    balanced. Shared by the local simulation's ``Executor._scan`` and the
+    distributed ``dist.placement`` so the two backends always shard
+    identically — byte-identical results stay a structural property."""
+    loads = [0] * P
+    dest: List[int] = []
+    for sz in page_bytes:
+        w = min(range(P), key=lambda i: loads[i])
+        dest.append(w)
+        loads[w] += int(sz)
+    return dest
 
 
 # ------------------------------------------------------------------- glue

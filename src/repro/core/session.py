@@ -32,9 +32,11 @@ Usage::
     emps = sess.load("employees", records,      #    num_workers=4
                      type_name="Employee")
     payroll = (emps.filter(lambda e: e.salary > 60_000)
-                   .aggregate(key="dept", value="salary"))
+                   .group_by("dept")
+                   .agg(total=agg.sum("salary"), n=agg.count(),
+                        avg=agg.mean("salary")))
     print(payroll.explain())
-    result = payroll.collect()
+    result = payroll.collect()  # named columns: dept, total, n, avg
 """
 from __future__ import annotations
 

@@ -5,7 +5,8 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["lm_tokens", "points", "lda_triples", "denormalized_tpch"]
+__all__ = ["lm_tokens", "points", "lda_triples", "denormalized_tpch",
+           "tpch_q1_lineitems"]
 
 
 def lm_tokens(n_seqs: int, seq_len: int, vocab: int, seed: int = 0
@@ -41,6 +42,31 @@ def lda_triples(n_docs: int, vocab: int, avg_words: int = 50, seed: int = 0
     rec = np.zeros(len(out), dtype=np.dtype(
         [("doc", np.int64), ("word", np.int64), ("count", np.int64)]))
     rec["doc"], rec["word"], rec["count"] = out[:, 0], out[:, 1], out[:, 2]
+    return rec
+
+
+def tpch_q1_lineitems(n: int, seed: int = 0) -> np.ndarray:
+    """Lineitems with the TPC-H Q1 pricing columns (returnflag/linestatus
+    marginals roughly matching the spec's generator: ~half of rows are
+    shipped-and-open ``N``/``O``, returns split between ``A``/``R``).
+    ``shipdate`` is days-since-epoch; Q1's cutoff predicate filters on it.
+    Layout matches :class:`repro.apps.tpch.LineitemQ1`."""
+    rng = np.random.default_rng(seed)
+    dt = np.dtype([("returnflag", "S1"), ("linestatus", "S1"),
+                   ("qty", np.float64), ("extendedprice", np.float64),
+                   ("discount", np.float64), ("tax", np.float64),
+                   ("shipdate", np.int32)])
+    rec = np.zeros(n, dt)
+    ship = rng.integers(8000, 9500, n)  # ~1992-1996 in days-since-epoch
+    open_order = ship > 8700
+    rec["returnflag"] = np.where(open_order, b"N",
+                                 rng.choice([b"A", b"R"], n))
+    rec["linestatus"] = np.where(open_order, b"O", b"F")
+    rec["qty"] = rng.integers(1, 51, n).astype(np.float64)
+    rec["extendedprice"] = np.round(rng.uniform(900, 105_000, n), 2)
+    rec["discount"] = np.round(rng.integers(0, 11, n) / 100.0, 2)
+    rec["tax"] = np.round(rng.integers(0, 9, n) / 100.0, 2)
+    rec["shipdate"] = ship
     return rec
 
 

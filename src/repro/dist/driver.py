@@ -10,7 +10,8 @@ it:
 1. optimizes (unless the session already did) and plans physically — the
    broadcast decision priced against real transfer cost (``plan_physical``
    with ``num_partitions``);
-2. places set pages round-robin and builds each worker's shard store
+2. places set pages greedily by byte load (equal pages degenerate to
+   round-robin) and builds each worker's shard store
    (page references: zero-copy in-process, copy-on-write across a fork);
 3. launches N workers (threads, or forked processes routed through the
    driver star) running the SPMD :class:`~repro.dist.worker.WorkerRuntime`;

@@ -1,17 +1,23 @@
 """Partition placement: which pages of which stored sets each worker owns.
 
-Pages are placed round-robin (page ``i`` → worker ``i % N``) — exactly the
-partitioning the local simulated executor applies in ``Executor._scan``, so
-worker ``w``'s shard holds the same pages, in the same order, as local
-partition ``w``. Placement is the *only* thing this module decides; the
-shard build shares the driver's page objects by reference (zero-copy
-in-process, copy-on-write across a fork), honoring the paper's
-zero-cost-movement story: a page is the unit of ownership, never rows.
+Pages are placed greedily by byte load (each page, in storage order, to the
+currently least-loaded worker — :func:`repro.core.relops
+.greedy_page_placement`), which degenerates to the old round-robin for
+equal-size pages and keeps loads balanced under skew (``worker_stats``
+exposed the imbalance; this closes the ROADMAP follow-up). The local
+simulated executor partitions its scans with the *same* helper, so worker
+``w``'s shard holds the same pages, in the same order, as local partition
+``w`` — byte-identical results stay a structural property. Placement is
+the *only* thing this module decides; the shard build shares the driver's
+page objects by reference (zero-copy in-process, copy-on-write across a
+fork), honoring the paper's zero-cost-movement story: a page is the unit
+of ownership, never rows.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.core.relops import greedy_page_placement
 from repro.core.tcap import TCAPProgram
 from repro.objectmodel.store import PagedSet, PagedStore
 
@@ -20,7 +26,8 @@ __all__ = ["place_scans", "build_shard_store"]
 
 def place_scans(prog: TCAPProgram, store: PagedStore, num_workers: int
                 ) -> Dict[str, List[List[int]]]:
-    """set name -> per-worker list of owned page indices (round-robin)."""
+    """set name -> per-worker list of owned page indices (greedy
+    least-loaded-by-bytes, ties to the lowest rank)."""
     placement: Dict[str, List[List[int]]] = {}
     for op in prog.ops:
         if op.op != "SCAN":
@@ -28,8 +35,10 @@ def place_scans(prog: TCAPProgram, store: PagedStore, num_workers: int
         name = op.info["set"]
         if name in placement:
             continue
-        n_pages = len(store.get_set(name).pages)
-        placement[name] = [[i for i in range(n_pages) if i % num_workers == w]
+        s = store.get_set(name)
+        dest = greedy_page_placement(
+            [c * s.dtype.itemsize for c in s.counts], num_workers)
+        placement[name] = [[i for i, d in enumerate(dest) if d == w]
                            for w in range(num_workers)]
     return placement
 

@@ -19,7 +19,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.relops import AggMap
+from repro.core.relops import AggMap, AggSpec
 from repro.objectmodel.page import DEFAULT_PAGE_SIZE
 from repro.objectmodel.store import PagedSet
 from repro.objectmodel.vectorlist import VectorList
@@ -83,21 +83,43 @@ def decode_batch(block: "PageBlock | PickleBlock") -> VectorList:
 
 # --------------------------------------------------- AGG partial transfer
 def encode_agg_map(m: AggMap) -> Optional["PageBlock | PickleBlock"]:
-    """A pre-aggregation partial as a {key, value} page block (``None``
-    when empty — empty partials never hit the wire)."""
+    """A pre-aggregation partial as one packed page block: the key
+    column(s) under ``__k<i>`` plus every accumulator column under
+    ``__a<j>`` (``None`` when empty — empty partials never hit the wire).
+    Accumulators cross the wire, never finalized outputs, so composite
+    aggregates (mean) merge exactly at the receiver."""
     if not m.data:
         return None
-    keys = np.array(list(m.data.keys()))
-    vals = np.stack([np.asarray(v) for v in m.data.values()])
-    return encode_batch(VectorList({"key": keys, "value": vals}))
+    keys = list(m.data.keys())
+    cols: Dict[str, np.ndarray] = {}
+    dts = m.key_dtypes or [None] * m.spec.n_keys
+    if m.spec.n_keys == 1:
+        cols["__k0"] = np.array(keys, dtype=dts[0])
+    else:
+        for i in range(m.spec.n_keys):
+            cols[f"__k{i}"] = np.array([k[i] for k in keys], dtype=dts[i])
+    for j in range(len(m.spec.combiners)):
+        cols[f"__a{j}"] = np.stack(
+            [np.asarray(vals[j]) for vals in m.data.values()])
+    return encode_batch(VectorList(cols))
 
 
-def decode_agg_map(block, combiner: str) -> AggMap:
+def decode_agg_map(block, spec: AggSpec) -> AggMap:
     vl = decode_batch(block)
-    m = AggMap(combiner)
-    vals = vl["value"]
+    m = AggMap(spec)
+    # the page block's dtype descr preserved the source key dtypes — hand
+    # them back to the map so its final emit restores them exactly
+    m.key_dtypes = [np.asarray(vl[f"__k{i}"]).dtype
+                    for i in range(spec.n_keys)]
+    accs = [np.asarray(vl[f"__a{j}"])
+            for j in range(len(spec.combiners))]
     # .tolist() restores native python keys so hashing and dict identity
     # match the sender's map exactly
-    for i, k in enumerate(np.asarray(vl["key"]).tolist()):
-        m.data[k] = vals[i]
+    if spec.n_keys == 1:
+        keys = np.asarray(vl["__k0"]).tolist()
+    else:
+        keys = list(zip(*(np.asarray(vl[f"__k{i}"]).tolist()
+                          for i in range(spec.n_keys))))
+    for i, k in enumerate(keys):
+        m.data[k] = [a[i] for a in accs]
     return m

@@ -13,7 +13,8 @@ plan stages across workers:
 * TOPK — local per-batch top-k, ``gather_to`` worker 0, global merge there;
 * OUTPUT — ``gather_to`` the driver.
 
-Because placement is the same round-robin the local executor simulates and
+Because placement is the same greedy-by-bytes rule the local executor
+simulates and
 exchanges preserve (source rank, batch) order, results are byte-identical
 to ``Executor`` with ``num_partitions == num_workers`` — enforced by
 ``tests/test_dist.py``.
@@ -28,9 +29,9 @@ import numpy as np
 from repro.core.executor import ExecStats
 from repro.core.exprc import FusedStage, build_steps
 from repro.core.physical import PhysicalPlan
-from repro.core.relops import (AggMap, batch_kernel, batch_topk,
-                               concat_batches, merge_topk, probe_join,
-                               split_by_hash)
+from repro.core.relops import (AggMap, AggSpec, batch_kernel, batch_topk,
+                               concat_batches, device_segment_reducer,
+                               merge_topk, probe_join, split_by_hash)
 from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.dist.exchange import (PeerAborted, all_gather,
                                  exchange_partitions, gather_to)
@@ -142,14 +143,18 @@ class WorkerRuntime:
 
     def _aggregate(self, op: TCAPOp, i: int,
                    batches: List[VectorList]) -> List[VectorList]:
-        kcol, vcol = op.apply_cols
-        combiner = op.info.get("combiner", "sum")
-        m = AggMap(combiner)
-        for vl in batches:
-            m.absorb(np.asarray(vl[kcol]), np.asarray(vl[vcol]))
+        spec = AggSpec.from_op(op)
+        kcols, acols = spec.key_cols(op), spec.acc_cols(op)
+        reducer = (device_segment_reducer(spec.combiners)
+                   if self.expr_backend == "jax" else None)
+        # one absorb over the shard's concatenated rows (shared with the
+        # local simulation — identical association order by construction)
+        m = AggMap(spec)
+        m.absorb_batches(batches, kcols, acols, reducer=reducer)
         split = m.split_by_key_hash(self.P)
         tag = f"{i}:partials"
-        # partial maps ride the same page-block wire as batches
+        # packed multi-column partial maps ride the same page-block wire
+        # as batches (accumulators cross the wire, never finalized means)
         for dst in range(self.P):
             if dst == self.rank:
                 continue
@@ -157,13 +162,13 @@ class WorkerRuntime:
             if block is not None:
                 self.stats.shuffle_bytes += block.nbytes
             self.tr.send(dst, tag, block)
-        final = AggMap(combiner)
+        final = AggMap(spec)
         for src in range(self.P):
             if src == self.rank:
                 part = split[self.rank]
             else:
                 block = self.tr.recv(src, tag)
-                part = (decode_agg_map(block, combiner)
+                part = (decode_agg_map(block, spec)
                         if block is not None else None)
             if part is not None and part.data:
                 final.merge(part)

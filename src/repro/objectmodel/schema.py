@@ -29,6 +29,7 @@ possible.
 """
 from __future__ import annotations
 
+import hashlib
 import sys
 from typing import Dict, Mapping, Optional, Tuple, Union
 
@@ -38,7 +39,7 @@ from repro.objectmodel.handle import GLOBAL_TYPES
 
 __all__ = [
     "Field", "Record", "RecordMeta", "record", "schema_for", "pair_schema",
-    "pair_field_map",
+    "pair_field_map", "group_schema",
     "i8", "i16", "i32", "i64", "u8", "u16", "u32", "u64",
     "f32", "f64", "boolean", "S", "U", "vector",
 ]
@@ -261,6 +262,18 @@ def pair_field_map(left: type, right: type) -> Tuple[Tuple[str, int, str],
         taken.add(dst)
         moves.append((dst, 1, f))
     return tuple(moves)
+
+
+def group_schema(fields: Mapping[str, Field]) -> type:
+    """Synthesize the record schema of a grouped-aggregation result (key
+    fields followed by the named aggregate fields, in output order). The
+    type name is derived deterministically from the field layout, so two
+    structurally identical ``group_by().agg()`` queries share one schema
+    class (``record()`` dedupes identical re-declarations) and repeated
+    compilation never churns the catalog."""
+    desc = ";".join(f"{n}:{f.dtype.str}{f.shape}" for n, f in fields.items())
+    name = "Group_" + hashlib.md5(desc.encode()).hexdigest()[:10]
+    return record(name, dict(fields))
 
 
 def pair_schema(left: type, right: type) -> type:

@@ -6,9 +6,17 @@ N ∈ {1, 2, 4}: wall-clock per query, plus shuffle traffic — the local
 number is the simulator's *estimate* of bytes that would move, the
 workers number is *real serialized page traffic* through the exchange
 layer (shuffles, broadcasts, AGG partials, and the TOPK/OUTPUT gathers).
+
+Measured per worker count on both the in-process thread transport and
+the TCP socket transport (fork-launched workers dialing the localhost
+rendezvous) — the socket rows price what multi-host actually costs:
+per-query process launch + rendezvous + every byte through the kernel's
+TCP stack, against identical shuffle traffic.
 """
 from __future__ import annotations
 
+import multiprocessing
+import sys
 import time
 
 import numpy as np
@@ -67,6 +75,17 @@ def run(n: int = 100_000, reps: int = 5, worker_counts=(1, 2, 4)):
         t = _time_per_call(ds.collect, reps)
         st = sess.executor.stats
         rows.append((f"dist_workers_x{N}_n{n}", t * 1e6,
+                     f"real_shuffle_bytes={st.shuffle_bytes} "
+                     f"vs_local={t / t_local:.2f}x"))
+    socket_ok = (sys.platform != "win32"
+                 and "fork" in multiprocessing.get_all_start_methods())
+    for N in (worker_counts if socket_ok else ()):
+        sess = Session(backend="workers", num_workers=N,
+                       worker_kind="socket", broadcast_threshold_bytes=0)
+        ds = _query(sess, emps, deps)
+        t = _time_per_call(ds.collect, reps)
+        st = sess.executor.stats
+        rows.append((f"dist_socket_x{N}_n{n}", t * 1e6,
                      f"real_shuffle_bytes={st.shuffle_bytes} "
                      f"vs_local={t / t_local:.2f}x"))
     return rows

@@ -24,7 +24,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.objectmodel.store import PagedStore
 
-__all__ = ["PhysicalPlan", "plan_physical", "estimate_bytes"]
+__all__ = ["PhysicalPlan", "plan_physical", "estimate_bytes",
+           "split_pipelines", "plan_to_wire", "plan_from_wire"]
 
 FILTER_SELECTIVITY = 0.5  # no value statistics (paper §7 future work)
 
@@ -85,6 +86,13 @@ def plan_physical(prog: TCAPProgram, store: PagedStore,
                     choice = "hash_partition"
             algo[id(op)] = choice
 
+    return PhysicalPlan(algo, split_pipelines(prog), memo)
+
+
+def split_pipelines(prog: TCAPProgram) -> List[List[TCAPOp]]:
+    """Pipeline decomposition (decision 2): split at pipe sinks. A pure
+    function of the program, so a receiver of a shipped plan rebuilds the
+    identical decomposition from the program alone."""
     pipelines: List[List[TCAPOp]] = []
     cur: List[TCAPOp] = []
     for op in prog.ops:
@@ -94,4 +102,23 @@ def plan_physical(prog: TCAPProgram, store: PagedStore,
             cur = []
     if cur:
         pipelines.append(cur)
-    return PhysicalPlan(algo, pipelines, memo)
+    return pipelines
+
+
+# ------------------------------------------------------- wire round-trip
+def plan_to_wire(prog: TCAPProgram, plan: PhysicalPlan) -> Dict:
+    """A picklable view of ``plan``: join decisions re-keyed from op
+    ``id()`` (which does not survive pickling) to op index within
+    ``prog``. Pipelines are not shipped — they are re-derived from the
+    program (:func:`split_pipelines`)."""
+    algo = {i: plan.join_algo.get(id(op), "hash_partition")
+            for i, op in enumerate(prog.ops) if op.op == "JOIN"}
+    return {"join_algo": algo, "estimates": dict(plan.estimates)}
+
+
+def plan_from_wire(prog: TCAPProgram, wire: Dict) -> PhysicalPlan:
+    """Rebuild a :class:`PhysicalPlan` against this process's copy of
+    ``prog`` (the one the ops' ids refer to)."""
+    return PhysicalPlan(
+        {id(prog.ops[i]): a for i, a in wire["join_algo"].items()},
+        split_pipelines(prog), dict(wire["estimates"]))

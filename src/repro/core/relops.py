@@ -48,12 +48,46 @@ __all__ = [
     "AggMap", "AggSpec", "assemble_output", "batch_kernel", "batch_topk",
     "bytes_of", "concat_batches", "device_segment_reducer",
     "greedy_page_placement", "hash_col", "merge_topk", "probe_join",
-    "split_by_hash", "stage_eval",
+    "split_by_hash", "stable_key_hash", "stage_eval",
 ]
+
+_FNV_OFFSET = 0xcbf29ce484222325
+_FNV_PRIME = 0x100000001b3
+_U64 = (1 << 64) - 1
+
+
+def _fnv1a(data: bytes) -> int:
+    """FNV-1a 64-bit, folded into int64 range."""
+    h = _FNV_OFFSET
+    for byte in data:
+        h = ((h ^ byte) * _FNV_PRIME) & _U64
+    return h - (1 << 64) if h >= (1 << 63) else h
+
+
+def stable_key_hash(k) -> int:
+    """``hash()``, except process-independent for str/bytes (and tuples
+    containing them): Python salts built-in str/bytes hashing per process
+    (PYTHONHASHSEED), which would route the same key to different
+    destinations on independent worker processes — silently splitting
+    groups and losing join matches under the socket transport's
+    connect mode. int/float/bool hashing is already unsalted and keeps
+    the built-in path."""
+    if isinstance(k, tuple):
+        h = _FNV_OFFSET
+        for item in k:
+            h = ((h ^ (stable_key_hash(item) & _U64)) * _FNV_PRIME) & _U64
+        return h - (1 << 64) if h >= (1 << 63) else h
+    if isinstance(k, bytes):  # np.bytes_ is a bytes subclass
+        return _fnv1a(k)
+    if isinstance(k, str):    # np.str_ is a str subclass
+        return _fnv1a(k.encode("utf-8", "surrogatepass"))
+    return hash(k)
 
 
 def hash_col(col: np.ndarray) -> np.ndarray:
-    """Stable vectorized key hashing."""
+    """Stable vectorized key hashing (process-independent: shuffle
+    routing derived from these values must agree across worker processes
+    that share no hash salt)."""
     if col.dtype.kind in "iu":
         x = col.astype(np.int64, copy=True)
         x = (x ^ (x >> 33)) * np.int64(-49064778989728563)  # splitmix64-ish
@@ -61,8 +95,32 @@ def hash_col(col: np.ndarray) -> np.ndarray:
     if col.dtype.kind == "f":
         return hash_col(col.view(np.int64) if col.dtype.itemsize == 8
                         else col.astype(np.float64).view(np.int64))
-    return np.fromiter((hash(x) for x in col.tolist()), np.int64,
-                       count=len(col))
+    if col.dtype.kind == "S" and len(col):
+        return _fnv1a_bytes_col(col)
+    return np.fromiter((stable_key_hash(x) for x in col.tolist()),
+                       np.int64, count=len(col))
+
+
+def _fnv1a_bytes_col(col: np.ndarray) -> np.ndarray:
+    """FNV-1a folded across a fixed-width bytes column, vectorized over
+    rows (``itemsize`` numpy passes instead of a per-byte Python loop
+    per element — the hot path for string-keyed shuffles). Bit-identical
+    to ``stable_key_hash`` on each element: trailing NUL padding is
+    excluded exactly the way ``.tolist()`` strips it, so an S8 and an
+    S16 column holding the same logical key hash alike (join sides of
+    different declared widths co-partition)."""
+    w = col.dtype.itemsize
+    mat = np.ascontiguousarray(col).view(np.uint8).reshape(len(col), w)
+    rev_nonzero = mat[:, ::-1] != 0
+    lengths = np.where(rev_nonzero.any(axis=1),
+                       w - rev_nonzero.argmax(axis=1), 0)
+    h = np.full(len(col), _FNV_OFFSET, dtype=np.uint64)
+    prime = np.uint64(_FNV_PRIME)
+    for j in range(w):
+        # uint64 arithmetic wraps mod 2**64, matching the scalar fold
+        h = np.where(j < lengths,
+                     (h ^ mat[:, j].astype(np.uint64)) * prime, h)
+    return h.view(np.int64)
 
 
 def stage_eval(op: TCAPOp, cols: Sequence[np.ndarray],
@@ -396,13 +454,15 @@ class AggMap:
                                 for c, old, v in zip(combs, cur, vals)]
 
     def split_by_key_hash(self, P: int) -> List["AggMap"]:
-        """Partition this map's entries by ``hash(key) % P`` (the AGG
-        shuffle kernel); insertion order is preserved within each split."""
+        """Partition this map's entries by ``stable_key_hash(key) % P``
+        (the AGG shuffle kernel — process-independent, so connect-mode
+        workers with different hash salts route each key identically);
+        insertion order is preserved within each split."""
         out = [AggMap(self.spec) for _ in range(P)]
         for m in out:
             m.key_dtypes = self.key_dtypes
         for k, v in self.data.items():
-            out[hash(k) % P].data[k] = v
+            out[stable_key_hash(k) % P].data[k] = v
         return out
 
     def nbytes(self) -> int:

@@ -88,6 +88,8 @@ class Session:
                  executor_cls=Executor, backend: str = "local",
                  num_workers: Optional[int] = None,
                  worker_kind: Optional[str] = None,
+                 socket_launch: Optional[str] = None,
+                 socket_addr: Optional[Tuple[str, int]] = None,
                  plan_cache_size: int = 64,
                  expr_backend: str = "numpy"):
         self.store = store if store is not None else PagedStore()
@@ -113,6 +115,12 @@ class Session:
                     f"num_workers={num_workers} disagree — the workers "
                     "backend takes one worker per partition; pass just "
                     "num_workers")
+            if (worker_kind == "socket" and socket_launch == "connect"
+                    and num_workers is None and num_partitions is None):
+                raise ValueError(
+                    "worker_kind='socket' with socket_launch='connect' "
+                    "needs an explicit num_workers — the driver must know "
+                    "how many external workers to await at the rendezvous")
             from repro.dist.driver import DistributedExecutor
             self.executor = DistributedExecutor(
                 self.store,
@@ -120,7 +128,8 @@ class Session:
                 vector_rows=vector_rows, do_optimize=False,
                 broadcast_threshold_bytes=broadcast_threshold_bytes,
                 write_outputs=False, worker_kind=worker_kind or "thread",
-                expr_backend=expr_backend)
+                expr_backend=expr_backend, socket_launch=socket_launch,
+                socket_addr=socket_addr)
         elif backend == "local":
             if num_workers is not None:
                 raise ValueError(
@@ -130,6 +139,10 @@ class Session:
                 raise ValueError(
                     "worker_kind only applies to backend='workers' "
                     "(the local backend simulates partitions in-process)")
+            if socket_launch is not None or socket_addr is not None:
+                raise ValueError(
+                    "socket_launch/socket_addr only apply to "
+                    "backend='workers' with worker_kind='socket'")
             self.executor = executor_cls(
                 self.store,
                 num_partitions=4 if num_partitions is None
@@ -336,7 +349,9 @@ class Session:
             plan = plan_physical(prog, self.store,
                                  self.executor.broadcast_threshold,
                                  num_partitions=self.executor.P)
-        backend = (f"workers x{self.executor.P}" if self.backend == "workers"
+        backend = (f"workers x{self.executor.P} "
+                   f"via {self.executor.worker_kind}"
+                   if self.backend == "workers"
                    else f"local sim x{self.executor.P}")
         lines = [f"== optimized TCAP ({len(prog)} ops) =="]
         if rep is not None:
@@ -375,8 +390,10 @@ class Session:
         if worker_stats:
             per = ", ".join(f"w{i}={ws.shuffle_bytes}"
                             for i, ws in enumerate(worker_stats))
-            lines.append(f"  per-worker shuffle_bytes (page-serialized): "
-                         f"{per}")
+            kind = getattr(self.executor, "worker_kind", None)
+            label = ("page-serialized" if kind is None
+                     else f"page-serialized, transport={kind}")
+            lines.append(f"  per-worker shuffle_bytes ({label}): {per}")
         return lines
 
     # ------------------------------------------------------------ stats

@@ -25,16 +25,32 @@ are taken per plan decision, not per worker. ``worker_stats[w]`` keeps
 worker ``w``'s own view for skew analysis.
 
 Worker kinds: ``"thread"`` (default; shares one address space — fine
-because TCAP execution is numpy-bound) and ``"fork"`` (real process
+because TCAP execution is numpy-bound), ``"fork"`` (real process
 isolation; requires the ``fork`` start method since TCAP programs carry
 native lambdas that cannot be pickled — they ride the fork image instead,
-and only page blocks cross process boundaries).
+and only page blocks cross process boundaries), and ``"socket"`` (framed
+TCP through a driver-side rendezvous — the true multi-host transport).
+
+``worker_kind="socket"`` launches workers one of three ways
+(``socket_launch``): ``"fork"`` (default) forks N processes that dial
+back over localhost TCP — programs ride the fork image, data rides real
+sockets; ``"thread"`` runs the workers as in-process threads over real
+TCP (the only socket mode compatible with ``expr_backend="jax"``, since
+XLA does not survive a fork); ``"connect"`` waits for N external
+``python -m repro.dist.worker --connect host:port`` processes, shipping
+each its rank, the program (which must then be picklable — no native
+lambdas), the physical plan, and its shard's page bytes.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
 import queue
+import socket
+import sys
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -43,16 +59,22 @@ from repro.core.compiler import compile_graph
 from repro.core.computations import Computation
 from repro.core.executor import ExecStats
 from repro.core.optimizer import optimize
-from repro.core.physical import PhysicalPlan, plan_physical
+from repro.core.physical import PhysicalPlan, plan_physical, plan_to_wire
 from repro.core.tcap import TCAPProgram
 from repro.core.relops import assemble_output
-from repro.dist.exchange import ProcessTransport, ThreadTransport
+from repro.dist.exchange import (ProcessTransport, SocketTransport,
+                                 ThreadTransport)
 from repro.dist.placement import build_shard_store, place_scans
-from repro.dist.protocol import ABORT, DRIVER, decode_batch
-from repro.dist.worker import worker_main
+from repro.dist.protocol import (ABORT, DRIVER, HELLO, PROTO_VERSION, SETUP,
+                                 WELCOME, PageBlock, ProtocolError,
+                                 configure_socket, decode_batch, read_frame,
+                                 write_frame)
+from repro.dist.worker import connect_worker, worker_main
 from repro.objectmodel.store import PagedStore
 
 __all__ = ["DistributedExecutor"]
+
+SOCKET_LAUNCHES = ("fork", "thread", "connect")
 
 
 class DistributedExecutor:
@@ -64,22 +86,55 @@ class DistributedExecutor:
                  vector_rows: int = 8192, do_optimize: bool = True,
                  broadcast_threshold_bytes: int = 2 << 30,
                  write_outputs: bool = True, worker_kind: str = "thread",
-                 expr_backend: str = "numpy"):
+                 expr_backend: str = "numpy",
+                 socket_launch: Optional[str] = None,
+                 socket_addr: Optional[Tuple[str, int]] = None,
+                 socket_accept_timeout: float = 60.0):
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
         from repro.core.exprc import EXPR_BACKENDS
         if expr_backend not in EXPR_BACKENDS:
             raise ValueError(f"unknown expr_backend {expr_backend!r} "
                              f"(expected one of {EXPR_BACKENDS})")
+        if worker_kind not in ("thread", "fork", "socket"):
+            raise ValueError(f"unknown worker_kind {worker_kind!r} "
+                             "(expected 'thread', 'fork', or 'socket')")
         if worker_kind == "fork" and expr_backend == "jax":
             raise ValueError(
                 "worker_kind='fork' cannot run expr_backend='jax': XLA's "
                 "runtime threads do not survive a fork taken after jax "
                 "initialized in the parent (forked children would hang in "
                 "jit until the 30s SIGTERM) — use worker_kind='thread'")
-        if worker_kind not in ("thread", "fork"):
-            raise ValueError(f"unknown worker_kind {worker_kind!r} "
-                             "(expected 'thread' or 'fork')")
+        if worker_kind != "socket":
+            if socket_launch is not None or socket_addr is not None:
+                raise ValueError(
+                    "socket_launch/socket_addr only apply to "
+                    "worker_kind='socket'")
+            self.socket_launch = None
+        else:
+            socket_launch = socket_launch or "fork"
+            if socket_launch not in SOCKET_LAUNCHES:
+                raise ValueError(
+                    f"unknown socket_launch {socket_launch!r} (expected "
+                    f"one of {SOCKET_LAUNCHES})")
+            if socket_launch == "fork" and expr_backend == "jax":
+                raise ValueError(
+                    "worker_kind='socket' with socket_launch='fork' cannot "
+                    "run expr_backend='jax': XLA's runtime threads do not "
+                    "survive the fork that spawns the connecting workers — "
+                    "use socket_launch='thread' (in-process workers over "
+                    "real TCP) or socket_launch='connect' (external worker "
+                    "processes with their own jax)")
+            if socket_launch == "connect" and (
+                    socket_addr is None or socket_addr[1] == 0):
+                raise ValueError(
+                    "socket_launch='connect' needs an explicit "
+                    "socket_addr=(host, port) with a nonzero port — "
+                    "external workers must be told where to dial before "
+                    "the query runs")
+            self.socket_launch = socket_launch
+        self.socket_addr = socket_addr
+        self.socket_accept_timeout = socket_accept_timeout
         self.store = store
         self.P = num_workers
         self.vector_rows = vector_rows
@@ -113,8 +168,14 @@ class DistributedExecutor:
         placement = place_scans(prog, self.store, self.P)
         shards = [build_shard_store(self.store, placement, w)
                   for w in range(self.P)]
-        runtime = (_ThreadRuntime if self.worker_kind == "thread"
-                   else _ProcessRuntime)(self.P)
+        if self.worker_kind == "socket":
+            runtime = _SocketRuntime(
+                self.P, self.socket_launch,
+                self.socket_addr or ("127.0.0.1", 0),
+                self.socket_accept_timeout)
+        else:
+            runtime = (_ThreadRuntime if self.worker_kind == "thread"
+                       else _ProcessRuntime)(self.P)
         outputs, self.worker_stats = runtime.run(
             prog, plan, shards, self.vector_rows, self.expr_backend)
         self._aggregate_stats(prog, plan)
@@ -154,6 +215,109 @@ class DistributedExecutor:
 class _Collected:
     outputs: List[List]
     stats: List[Optional[ExecStats]]
+
+
+class _StarRouter:
+    """The star-routing mechanism the process-backed runtimes share: one
+    pump thread per source drains that worker and routes driver-bound
+    messages; one sender thread per destination serializes forwards, so a
+    blocked write never stalls draining (the P>=3 deadlock fix); an ABORT
+    broadcast on failure unwinds peers blocked in ``recv``. Parametrized
+    by the medium: ``read(src)`` returns the next ``(rank, dst, tag,
+    msg)`` from that worker (``None`` on clean EOF, raising on transport
+    errors); ``write(dst, (src, tag, msg))`` forwards one message.
+    Teardown ordering differs per medium, so the runtime composes
+    ``stop_senders``/``join_*`` itself."""
+
+    def __init__(self, P: int, read, write):
+        self.P = P
+        self._read = read
+        self._write = write
+        self.driver_queue: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._out = [queue.SimpleQueue() for _ in range(P)]
+        self._stop = object()
+        self._tag_done = [False] * P
+        self._senders = [threading.Thread(target=self._sender, args=(d,),
+                                          daemon=True) for d in range(P)]
+        self._pumps = [threading.Thread(target=self._pump, args=(s,),
+                                        daemon=True) for s in range(P)]
+
+    def start(self) -> None:
+        for t in self._senders + self._pumps:
+            t.start()
+
+    def collect_or_abort(self) -> _Collected:
+        """Drain until every worker reports done; on failure, broadcast
+        ABORT to every worker before re-raising so peers blocked in recv
+        unwind immediately instead of stalling into the join timeout."""
+        try:
+            return _collect(self.driver_queue, self.P)
+        except Exception:
+            for q in self._out:
+                q.put((DRIVER, ABORT, None))
+            raise
+
+    def stop_senders(self) -> None:
+        for q in self._out:
+            q.put(self._stop)
+
+    def join_senders(self, timeout: float) -> None:
+        for t in self._senders:
+            t.join(timeout=timeout)
+
+    def join_pumps(self, timeout: float) -> None:
+        for t in self._pumps:
+            t.join(timeout=timeout)
+
+    # ------------------------------------------------------------ threads
+    def _sender(self, dst: int) -> None:
+        q = self._out[dst]
+        while True:
+            item = q.get()
+            if item is self._stop:
+                return
+            try:
+                self._write(dst, item)
+            except OSError:
+                return  # dst died; its pump reports the failure
+
+    def _pump(self, src: int) -> None:
+        while True:
+            try:
+                frame = self._read(src)
+            except Exception as e:
+                if not self._tag_done[src]:
+                    self.driver_queue.put(
+                        (src, "error",
+                         f"worker {src} connection failed mid-frame: {e}"))
+                return
+            if frame is None:
+                if not self._tag_done[src]:
+                    self.driver_queue.put(
+                        (src, "error",
+                         f"worker {src} died unexpectedly "
+                         "(connection closed)"))
+                return
+            rank, dst, tag, msg = frame
+            if dst == DRIVER:
+                if tag in ("done", "error"):
+                    self._tag_done[src] = True
+                    self.driver_queue.put((rank, tag, msg))
+                    if tag == "error":
+                        return
+                else:
+                    self.driver_queue.put((rank, tag, msg))
+            elif isinstance(dst, int) and 0 <= dst < self.P:
+                self._out[dst].put((rank, tag, msg))
+            else:
+                # a version-skewed or confused peer (e.g. built for a
+                # different P) — mis-routing would deliver to the wrong
+                # worker, and a dead pump would hang _collect forever
+                self.driver_queue.put(
+                    (src, "error",
+                     f"worker {src} sent a frame for invalid "
+                     f"destination {dst!r} (P={self.P})"))
+                return
 
 
 class _ThreadRuntime:
@@ -230,71 +394,28 @@ class _ProcessRuntime:
             pipes[rank][1].close()  # child's end, in the parent
 
         conns = [pipes[rank][0] for rank in range(self.P)]
-        driver_queue: "queue.SimpleQueue" = queue.SimpleQueue()
-        # forwarding is decoupled from draining: a pump never blocks in
-        # conns[dst].send (a full destination pipe would stop it draining
-        # its own worker and close a send-cycle once payloads exceed the
-        # OS pipe buffer — a real deadlock at P >= 3); instead it enqueues
-        # to the destination's sender thread, the conn's sole writer.
-        out_queues = [queue.SimpleQueue() for _ in range(self.P)]
-        stop = object()
 
-        def sender(dst: int) -> None:
-            q = out_queues[dst]
-            while True:
-                item = q.get()
-                if item is stop:
-                    return
-                try:
-                    conns[dst].send(item)
-                except (BrokenPipeError, OSError):
-                    return  # dst died; its pump reports the failure
+        def pipe_read(src: int):
+            try:
+                return conns[src].recv()  # (rank, dst, tag, msg)
+            except EOFError:
+                return None
 
-        def pump(src: int) -> None:
-            conn = conns[src]
-            while True:
-                try:
-                    rank, dst, tag, msg = conn.recv()
-                except EOFError:
-                    if tag_done[src]:
-                        return
-                    driver_queue.put((src, "error",
-                                      f"worker {src} died unexpectedly"))
-                    return
-                if dst == DRIVER:
-                    if tag in ("done", "error"):
-                        tag_done[src] = True
-                        driver_queue.put((rank, tag, msg))
-                        if tag == "error":
-                            return
-                    else:
-                        driver_queue.put((rank, tag, msg))
-                else:
-                    out_queues[dst].put((rank, tag, msg))
-
-        tag_done = [False] * self.P
-        senders = [threading.Thread(target=sender, args=(d,), daemon=True)
-                   for d in range(self.P)]
-        pumps = [threading.Thread(target=pump, args=(s,), daemon=True)
-                 for s in range(self.P)]
-        for t in senders + pumps:
-            t.start()
+        router = _StarRouter(
+            self.P, read=pipe_read,
+            write=lambda dst, item: conns[dst].send(item))
+        router.start()
         try:
-            col = _collect(driver_queue, self.P)
-        except Exception:
-            # same abort the thread runtime broadcasts: peers blocked in
-            # recv unwind immediately instead of stalling into the 30 s
-            # join timeout and a SIGTERM
-            for q in out_queues:
-                q.put((DRIVER, ABORT, None))
-            raise
+            # on failure collect_or_abort broadcasts the same ABORT the
+            # thread runtime does: peers blocked in recv unwind instead
+            # of stalling into the 30 s join timeout and a SIGTERM
+            col = router.collect_or_abort()
         finally:
             for p in procs:
                 p.join(timeout=30)
                 if p.is_alive():  # pragma: no cover - hung worker
                     p.terminate()
-            for q in out_queues:
-                q.put(stop)
+            router.stop_senders()
         return col.outputs, [s for s in col.stats if s is not None]
 
 
@@ -304,6 +425,211 @@ def _process_child(rank: int, P: int, conn, shard: PagedStore,
     tr = ProcessTransport(rank, conn)
     worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend)
     conn.close()
+
+
+def _socket_child(rank: int, P: int, addr: Tuple[str, int], epoch: str,
+                  shard: PagedStore, vector_rows: int, prog: TCAPProgram,
+                  plan: PhysicalPlan, expr_backend: str) -> None:
+    """A driver-launched socket worker (fork child or in-process thread):
+    dial the rendezvous with its pre-assigned rank, then run the shard."""
+    try:
+        sock, _welcome = connect_worker(addr, rank=rank, epoch=epoch,
+                                        retry_seconds=10.0)
+    except OSError:  # pragma: no cover - driver died first
+        return  # the rendezvous reports the missing worker
+    tr = SocketTransport(rank, sock)
+    worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend)
+    tr.close()
+
+
+class _SocketRuntime:
+    """Workers over framed TCP, the driver routing worker→worker frames —
+    the fork star with sockets for pipes (same per-destination sender
+    threads so a blocked forward never stalls draining, same ABORT
+    broadcast so a dead peer unwinds the query instead of hanging a
+    ``recv``). The rendezvous: workers dial the advertised host:port,
+    handshake rank/epoch (a per-query epoch rejects stale reconnects),
+    then frames flow until every worker reports done."""
+
+    def __init__(self, P: int, launch: str, addr: Tuple[str, int],
+                 accept_timeout: float):
+        self.P = P
+        self.launch = launch
+        self.addr = addr
+        self.accept_timeout = accept_timeout
+
+    def run(self, prog: TCAPProgram, plan: PhysicalPlan,
+            shards: List[PagedStore], vector_rows: int,
+            expr_backend: str = "numpy"
+            ) -> Tuple[List[List], List[ExecStats]]:
+        if self.launch == "connect":
+            try:
+                pickle.dumps(prog)
+            except Exception as e:
+                raise ValueError(
+                    "socket_launch='connect' ships the TCAP program to "
+                    "external workers by pickling, and this program cannot "
+                    f"be pickled ({e!r}) — native Python lambdas "
+                    "(make_lambda) only exist in-process; express the "
+                    "query in the lambda DSL, or run socket_launch='fork' "
+                    "workers on the driver host") from e
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        try:
+            listener.bind(self.addr)
+            listener.listen(self.P + 2)
+        except BaseException:
+            listener.close()
+            raise
+        host, port = listener.getsockname()[:2]
+        advert = ("127.0.0.1" if host in ("0.0.0.0", "") else host, port)
+        epoch = os.urandom(8).hex()
+
+        def setup_for(rank: int) -> Dict:
+            sets = {name: (s.page_size, s.dtype,
+                           PageBlock(s.dtype.descr, s.to_payloads(), ()))
+                    for name, s in shards[rank].sets.items()}
+            return {"prog": prog, "plan": plan_to_wire(prog, plan),
+                    "vector_rows": vector_rows,
+                    "expr_backend": expr_backend, "sets": sets}
+
+        procs: List = []
+        worker_threads: List[threading.Thread] = []
+        if self.launch == "fork":
+            import multiprocessing as mp
+            try:
+                ctx = mp.get_context("fork")
+            except ValueError as e:  # pragma: no cover - non-fork platforms
+                raise RuntimeError(
+                    "socket_launch='fork' needs the fork start method "
+                    "(native lambdas in TCAP programs cannot be pickled; "
+                    "they ride the fork image) — use socket_launch="
+                    "'thread' here, or external workers via "
+                    "socket_launch='connect'") from e
+            for rank in range(self.P):
+                p = ctx.Process(
+                    target=_socket_child,
+                    args=(rank, self.P, advert, epoch, shards[rank],
+                          vector_rows, prog, plan, expr_backend),
+                    name=f"pc-worker-{rank}", daemon=True)
+                procs.append(p)
+                p.start()
+        elif self.launch == "thread":
+            for rank in range(self.P):
+                t = threading.Thread(
+                    target=_socket_child,
+                    args=(rank, self.P, advert, epoch, shards[rank],
+                          vector_rows, prog, plan, expr_backend),
+                    name=f"pc-worker-{rank}", daemon=True)
+                worker_threads.append(t)
+                t.start()
+        else:
+            print(f"driver: waiting for {self.P} workers at {host}:{port} "
+                  f"(python -m repro.dist.worker --connect {host}:{port})",
+                  file=sys.stderr)
+
+        try:
+            conns = self._rendezvous(listener, epoch, setup_for)
+        except BaseException:
+            listener.close()
+            for p in procs:
+                p.terminate()
+            raise
+
+        router = _StarRouter(
+            self.P, read=lambda src: read_frame(conns[src]),
+            write=lambda dst, item: write_frame(conns[dst], item[0], dst,
+                                                item[1], item[2]))
+        router.start()
+        try:
+            col = router.collect_or_abort()
+        finally:
+            # ABORT frames (if any) were enqueued before stop, so joining
+            # the senders guarantees they reach the kernel send buffers
+            # before the connections close (close still delivers queued
+            # bytes before FIN)
+            router.stop_senders()
+            router.join_senders(10)
+            for c in conns:
+                try:
+                    c.close()
+                except OSError:  # pragma: no cover - already torn down
+                    pass
+            listener.close()
+            for p in procs:
+                p.join(timeout=30)
+                if p.is_alive():  # pragma: no cover - hung worker
+                    p.terminate()
+            for t in worker_threads:
+                t.join(timeout=10)
+            router.join_pumps(5)
+        return col.outputs, [s for s in col.stats if s is not None]
+
+    def _rendezvous(self, listener, epoch: str, setup_for):
+        """Accept until all P ranks joined (or the deadline passes):
+        verify HELLO (protocol version; for driver-launched workers also
+        the per-query epoch and the pre-assigned rank — external workers
+        get the next free rank), reply WELCOME, and for external workers
+        ship the SETUP frame. Rogue or stale connections are dropped
+        without consuming a slot."""
+        conns: List = [None] * self.P
+        deadline = time.monotonic() + self.accept_timeout
+        pending = self.P
+        while pending:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            listener.settimeout(min(remaining, 1.0))
+            try:
+                c, _peer = listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:  # pragma: no cover - listener torn down
+                break
+            try:
+                configure_socket(c)
+                c.settimeout(min(max(remaining, 1.0), 15.0))
+                frame = read_frame(c)
+                if frame is None:
+                    raise ProtocolError("closed during handshake")
+                _, _, tag, hello = frame
+                if (tag != HELLO or not isinstance(hello, dict)
+                        or hello.get("proto") != PROTO_VERSION):
+                    raise ProtocolError("bad hello")
+                if self.launch == "connect":
+                    rank = conns.index(None)
+                else:
+                    if hello.get("epoch") != epoch:
+                        raise ProtocolError("stale epoch")
+                    rank = hello.get("rank")
+                    if (not isinstance(rank, int)
+                            or not 0 <= rank < self.P
+                            or conns[rank] is not None):
+                        raise ProtocolError("bad rank")
+                write_frame(c, DRIVER, rank, WELCOME,
+                            {"rank": rank, "P": self.P, "epoch": epoch})
+                # SETUP carries the whole shard's page bytes — it must
+                # not run under the (small) handshake timeout, or a big
+                # shard / slow link gets the worker dropped mid-frame
+                c.settimeout(None)
+                if self.launch == "connect":
+                    write_frame(c, DRIVER, rank, SETUP, setup_for(rank))
+                conns[rank] = c
+                pending -= 1
+            except (ProtocolError, OSError):
+                try:
+                    c.close()
+                except OSError:  # pragma: no cover
+                    pass
+        if pending:
+            for c in conns:
+                if c is not None:
+                    c.close()
+            raise RuntimeError(
+                f"socket rendezvous timed out after "
+                f"{self.accept_timeout:.0f}s: {self.P - pending}/{self.P} "
+                "workers connected")
+        return conns
 
 
 def _collect(driver_queue: "queue.SimpleQueue", P: int) -> _Collected:

@@ -11,14 +11,17 @@ concurrent exchanges of one program never interleave):
 * :func:`gather_to` — gather-merge: everyone ships to one root (TOPK's
   global merge at worker 0, OUTPUT's collect at the driver).
 
-Two transports behind one interface:
+Three transports behind one interface:
 
 * :class:`ThreadTransport` — per-worker in-process mailboxes;
 * :class:`ProcessTransport` — a duplex pipe per forked worker, with the
-  driver routing worker→worker messages (a star; a socket mesh is the
-  drop-in replacement).
+  driver routing worker→worker messages (a star);
+* :class:`SocketTransport` — one framed TCP connection to the driver,
+  which routes worker→worker frames over the same star — the true
+  multi-host transport (workers may live on other machines; see
+  ``python -m repro.dist.worker --connect host:port``).
 
-Both move the same serialized page blocks, so ``shuffle_bytes`` measures
+All move the same serialized page blocks, so ``shuffle_bytes`` measures
 identical traffic regardless of the worker kind. ``recv`` buffers by
 (source, tag): the exchange schedule is SPMD-deterministic, but message
 *arrival* order is not.
@@ -30,11 +33,13 @@ from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.executor import ExecStats
-from repro.dist.protocol import ABORT, DRIVER, decode_batch, encode_batch
+from repro.dist.protocol import (ABORT, DRIVER, decode_batch, encode_batch,
+                                 read_frame, write_frame)
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["PeerAborted", "ThreadTransport", "ProcessTransport",
-           "exchange_partitions", "all_gather", "gather_to"]
+           "SocketTransport", "exchange_partitions", "all_gather",
+           "gather_to"]
 
 
 class PeerAborted(RuntimeError):
@@ -97,6 +102,47 @@ class ProcessTransport:
                 return msg
             self._buffer.setdefault((got_src, got_tag),
                                     deque()).append(msg)
+
+
+class SocketTransport:
+    """TCP transport: one length-prefixed framed connection to the driver,
+    which routes worker→worker frames (the same star topology as the fork
+    router — peers never dial each other, so workers only need to reach
+    the driver's advertised host:port). Page payloads cross as raw bytes
+    (no pickle copy; see :mod:`repro.dist.protocol`). The socket has a
+    single writer — the worker's own thread."""
+
+    def __init__(self, rank: int, sock):
+        self.rank = rank
+        self.sock = sock
+        self._buffer: Dict[Tuple[int, str], deque] = {}
+
+    def send(self, dst: int, tag: str, msg: Any) -> None:
+        write_frame(self.sock, self.rank, dst, tag, msg)
+
+    def recv(self, src: int, tag: str) -> Any:
+        want = (src, tag)
+        buf = self._buffer.get(want)
+        if buf:
+            return buf.popleft()
+        while True:
+            frame = read_frame(self.sock)
+            if frame is None:
+                raise PeerAborted(
+                    "driver connection closed mid-query; aborting")
+            got_src, _dst, got_tag, msg = frame
+            if got_src == DRIVER and got_tag == ABORT:
+                raise PeerAborted("a peer worker failed; aborting")
+            if (got_src, got_tag) == want:
+                return msg
+            self._buffer.setdefault((got_src, got_tag),
+                                    deque()).append(msg)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
 
 
 # ------------------------------------------------------------- patterns

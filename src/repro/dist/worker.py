@@ -21,25 +21,31 @@ to ``Executor`` with ``num_partitions == num_workers`` — enforced by
 """
 from __future__ import annotations
 
+import socket
+import time
 import traceback
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.executor import ExecStats
 from repro.core.exprc import FusedStage, build_steps
-from repro.core.physical import PhysicalPlan
+from repro.core.physical import PhysicalPlan, plan_from_wire
 from repro.core.relops import (AggMap, AggSpec, batch_kernel, batch_topk,
                                concat_batches, device_segment_reducer,
                                merge_topk, probe_join, split_by_hash)
 from repro.core.tcap import TCAPOp, TCAPProgram
-from repro.dist.exchange import (PeerAborted, all_gather,
+from repro.dist.exchange import (PeerAborted, SocketTransport, all_gather,
                                  exchange_partitions, gather_to)
-from repro.dist.protocol import DRIVER, decode_agg_map, encode_agg_map
-from repro.objectmodel.store import PagedStore
+from repro.dist.protocol import (DRIVER, HELLO, PROTO_VERSION, SETUP,
+                                 WELCOME, ProtocolError, configure_socket,
+                                 decode_agg_map, encode_agg_map, read_frame,
+                                 write_frame)
+from repro.objectmodel.store import PagedSet, PagedStore
 from repro.objectmodel.vectorlist import VectorList
 
-__all__ = ["WorkerRuntime", "worker_main"]
+__all__ = ["WorkerRuntime", "worker_main", "connect_worker",
+           "run_remote_worker", "main"]
 
 
 class WorkerRuntime:
@@ -203,15 +209,158 @@ class WorkerRuntime:
 
 def worker_main(rank: int, num_workers: int, transport, shard: PagedStore,
                 vector_rows: int, prog: TCAPProgram,
-                plan: PhysicalPlan, expr_backend: str = "numpy") -> None:
-    """Entry point for both worker kinds: run, then report stats (or the
-    failure) to the driver."""
+                plan: PhysicalPlan, expr_backend: str = "numpy") -> bool:
+    """Entry point for every worker kind: run, then report stats (or the
+    failure) to the driver. Returns whether the query completed here —
+    False when it aborted (a peer failed) or this worker errored, so
+    process-worker entry points can exit nonzero for supervisors."""
     rt = WorkerRuntime(rank, num_workers, transport, shard, vector_rows,
                        expr_backend)
     try:
         rt.run(prog, plan)
         transport.send(DRIVER, "done", rt.stats)
+        return True
     except PeerAborted:
-        pass  # the driver raised already; nothing left to report
+        return False  # the driver raised already; nothing left to report
     except BaseException:
-        transport.send(DRIVER, "error", traceback.format_exc())
+        try:
+            transport.send(DRIVER, "error", traceback.format_exc())
+        except Exception:
+            pass  # transport already dead; the driver's pump reports it
+        return False
+
+
+# ----------------------------------------------------- socket rendezvous
+def connect_worker(addr: Tuple[str, int], *, rank: Optional[int] = None,
+                   epoch: Optional[str] = None, timeout: float = 30.0,
+                   retry_seconds: float = 0.0):
+    """Dial the driver's rendezvous at ``addr`` and handshake: send HELLO
+    (protocol version + the launched worker's pre-assigned rank/epoch, or
+    ``None`` for an external worker asking to be assigned one), expect
+    WELCOME back. Returns ``(socket, welcome)`` with the socket blocking
+    and Nagle disabled (exchange frames are latency-sensitive). With
+    ``retry_seconds``, the initial TCP connect is retried until the window
+    closes — external workers may be started before the driver listens."""
+    deadline = time.monotonic() + retry_seconds
+    while True:
+        try:
+            sock = socket.create_connection(addr, timeout=timeout)
+            break
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.2)
+    try:
+        configure_socket(sock)
+        write_frame(sock, rank if rank is not None else DRIVER, DRIVER,
+                    HELLO, {"proto": PROTO_VERSION, "rank": rank,
+                            "epoch": epoch})
+        frame = read_frame(sock)
+        if frame is None:
+            raise ProtocolError(
+                "driver closed the connection during handshake (stale "
+                "epoch, duplicate rank, or a full rendezvous?)")
+        _, _, tag, welcome = frame
+        if tag != WELCOME or not isinstance(welcome, dict):
+            raise ProtocolError(f"expected {WELCOME!r}, got {tag!r}")
+        sock.settimeout(None)
+        return sock, welcome
+    except BaseException:
+        sock.close()
+        raise
+
+
+def run_remote_worker(addr: Tuple[str, int], serve: bool = False,
+                      retry_seconds: float = 30.0) -> Tuple[int, int]:
+    """A worker on (potentially) another machine: connect to the driver's
+    advertised ``host:port``, receive rank + the query setup (program,
+    physical plan, this rank's shard pages — page bytes adopted verbatim),
+    run it, report. One query per connection; with ``serve=True`` the
+    worker reconnects for subsequent queries until the driver goes away.
+    Returns ``(completed, failed)`` query counts — failed covers queries
+    that aborted (a peer died) or errored here, so the entry point can
+    exit nonzero for supervisors."""
+    queries = 0
+    failed = 0
+    while True:
+        try:
+            sock, welcome = connect_worker(addr, retry_seconds=retry_seconds)
+        except (OSError, ProtocolError):
+            # connect refused (driver gone) or accepted-then-dropped
+            # without a WELCOME (rendezvous already full / tearing down)
+            if queries or failed:
+                return queries, failed  # done serving; driver went away
+            raise
+        rank, P = int(welcome["rank"]), int(welcome["P"])
+        frame = read_frame(sock)
+        if frame is None:
+            sock.close()
+            raise ProtocolError("driver closed before shipping the query "
+                                "setup")
+        _, _, tag, setup = frame
+        if tag != SETUP:
+            sock.close()
+            raise ProtocolError(f"expected {SETUP!r}, got {tag!r}")
+        prog = setup["prog"]
+        plan = plan_from_wire(prog, setup["plan"])
+        shard = PagedStore()
+        for name, (page_size, dtype, block) in setup["sets"].items():
+            shard.sets[name] = PagedSet.from_payloads(
+                name, dtype, block.payloads, page_size)
+        tr = SocketTransport(rank, sock)
+        ok = worker_main(rank, P, tr, shard, setup["vector_rows"], prog,
+                         plan, setup["expr_backend"])
+        tr.close()
+        if ok:
+            queries += 1
+        else:
+            failed += 1
+        if not serve:
+            return queries, failed
+
+
+def main(argv=None) -> int:
+    """``python -m repro.dist.worker --connect host:port`` — launch one
+    worker process that joins a ``Session(backend="workers",
+    worker_kind="socket", socket_launch="connect", ...)`` driver."""
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dist.worker",
+        description="Join a PlinyCompute socket-transport driver as one "
+                    "worker (true multi-host: run this on any machine "
+                    "that can reach the driver's advertised host:port).")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="the driver's rendezvous address")
+    ap.add_argument("--serve", action="store_true",
+                    help="reconnect and serve subsequent queries until "
+                         "the driver goes away (default: one query)")
+    ap.add_argument("--retry-seconds", type=float, default=30.0,
+                    help="keep retrying the initial connect this long "
+                         "(the worker may be started before the driver)")
+    args = ap.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    if not host or not port.isdigit():
+        ap.error(f"--connect takes HOST:PORT, got {args.connect!r}")
+    try:
+        served, failed = run_remote_worker((host, int(port)),
+                                           serve=args.serve,
+                                           retry_seconds=args.retry_seconds)
+    except (OSError, ProtocolError) as e:
+        # e.g. driver unreachable, or accepted-then-dropped (rendezvous
+        # already full: more workers dialed than num_workers)
+        print(f"worker: could not join the driver at {args.connect}: {e}",
+              file=sys.stderr)
+        return 1
+    print(f"worker: served {served} "
+          f"quer{'y' if served == 1 else 'ies'}"
+          + (f", {failed} aborted/failed" if failed else ""),
+          file=sys.stderr)
+    # nonzero when any query did not complete here (peer death or own
+    # error) so a supervisor keyed on the exit code can react
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
+    import sys
+    sys.exit(main())

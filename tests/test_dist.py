@@ -1,12 +1,16 @@
-"""Distributed worker runtime ↔ local simulated executor equivalence.
+"""Transport conformance: distributed runtime ↔ local simulated executor.
 
 ``Session(backend="workers", num_workers=N)`` must produce byte-identical
 results to the local ``Executor`` with ``num_partitions == N`` — same
-kernels (:mod:`repro.core.relops`), same round-robin placement, exchanges
-that preserve (source rank, batch) order. Covered here: the TPC-H entry
-points, join/agg/top-k fluent chains, both join algorithms, both worker
-kinds (threads and forked processes), the worker-count-1 degenerate case,
-and the real page-serialized ``shuffle_bytes`` surfaced via ``explain()``.
+kernels (:mod:`repro.core.relops`), same greedy placement, exchanges that
+preserve (source rank, batch) order — **for every transport**. The matrix
+here parametrizes ``worker_kind ∈ {thread, fork, socket}`` (socket on
+localhost: forked processes dialing the driver's TCP rendezvous, or
+in-process threads over real sockets for the jax backend) over every
+chain kind, both join algorithms, grouped aggregation, the TPC-H entry
+points, and N ∈ {1, 2, 4} worker counts. Fault injection for the socket
+path lives in ``test_dist_faults.py``; framing properties in
+``test_protocol_properties.py``.
 """
 import multiprocessing
 import sys
@@ -14,14 +18,45 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import Session, make_lambda
-from repro.data.synthetic import denormalized_tpch
+from repro.core import Session, agg, make_lambda
 
 EMP_DT = np.dtype([("ename", "S8"), ("dept", np.int64),
                    ("salary", np.int64)])
 DEP_DT = np.dtype([("deptkey", np.int64), ("rank", np.int64)])
 
 N_DEPTS = 5
+
+# every transport; socket rows carry the marker the CI equivalence job
+# selects with ``-m socket``
+TRANSPORTS = ["thread", "fork",
+              pytest.param("socket", marks=pytest.mark.socket)]
+
+
+def fork_available() -> bool:
+    return (sys.platform != "win32"
+            and "fork" in multiprocessing.get_all_start_methods())
+
+
+def transport_kw(worker_kind, expr_backend="numpy"):
+    """Session kwargs for one transport (skipping what the platform or the
+    build-time validation rules out): fork workers and the default
+    fork-launched socket workers need the fork start method; jax cannot
+    cross a fork, so jax × socket rides the thread-launched data plane
+    and jax × fork is refused at build time (asserted in
+    test_session_backend_validation)."""
+    kw = {"worker_kind": worker_kind}
+    if worker_kind == "fork":
+        if expr_backend == "jax":
+            pytest.skip("worker_kind='fork' x jax refused at build time")
+        if not fork_available():
+            pytest.skip("fork start method unavailable")
+    if worker_kind == "socket":
+        if expr_backend == "jax":
+            kw["socket_launch"] = "thread"
+        elif not fork_available():
+            pytest.skip("fork start method unavailable "
+                        "(socket workers are fork-launched by default)")
+    return kw
 
 
 def _emps(n=700, seed=3):
@@ -37,15 +72,19 @@ def _emps(n=700, seed=3):
 
 
 def _sessions(n=700, *, num_partitions=3, expr_backend="numpy",
-              **workers_kw):
+              broadcast_threshold_bytes=None, **workers_kw):
     """A (local, workers) session pair over identical but independent
-    stores — byte-identical results must not depend on sharing state."""
+    stores — byte-identical results must not depend on sharing state.
+    The broadcast threshold applies to BOTH sessions (a differing join
+    algorithm legitimately produces a different row order)."""
     emps, deps = _emps(n)
+    common = ({} if broadcast_threshold_bytes is None
+              else {"broadcast_threshold_bytes": broadcast_threshold_bytes})
     pair = []
     for kw in ({"num_partitions": num_partitions},
                {"backend": "workers", "num_workers": num_partitions,
                 **workers_kw}):
-        sess = Session(expr_backend=expr_backend, **kw)
+        sess = Session(expr_backend=expr_backend, **common, **kw)
         e = sess.load("emps", emps, type_name="Emp")
         d = sess.load("deps", deps, type_name="Dep")
         pair.append((sess, e, d))
@@ -73,36 +112,44 @@ def _chain(kind, e, d):
     if kind == "agg":
         return (e.filter(lambda r: r.salary > 40_000)
                  .aggregate(key="dept", value="salary"))
+    if kind == "group_agg":
+        return (e.group_by("dept")
+                 .agg(total=agg.sum("salary"), n=agg.count(),
+                      lo=agg.min("salary"), avg=agg.mean("salary")))
     if kind == "topk":
         return e.top_k(9, score="salary", payload="ename")
     raise AssertionError(kind)
 
 
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
 @pytest.mark.parametrize("expr_backend", ["interp", "numpy", "jax"])
-@pytest.mark.parametrize("kind", ["filter_select", "join", "agg", "topk"])
-def test_fluent_chain_equivalence(kind, expr_backend):
-    """The full equivalence matrix: every chain kind, local vs workers,
-    under every expression backend — all byte-identical. Cross-backend
-    equality is transitively enforced because each backend's local result
-    also byte-matches the others' (same data, same seed; see
-    test_exprc.py for the direct three-way comparison)."""
-    (ls, le, ld), (ws, we, wd) = _sessions(expr_backend=expr_backend)
+@pytest.mark.parametrize("kind", ["filter_select", "join", "agg",
+                                  "group_agg", "topk"])
+def test_fluent_chain_equivalence(kind, expr_backend, worker_kind):
+    """The full equivalence matrix: every chain kind (including grouped
+    aggregation), local vs workers, under every expression backend and
+    every transport — all byte-identical. Cross-backend equality is
+    transitively enforced because each backend's local result also
+    byte-matches the others' (same data, same seed; see test_exprc.py for
+    the direct three-way comparison)."""
+    (ls, le, ld), (ws, we, wd) = _sessions(
+        expr_backend=expr_backend,
+        **transport_kw(worker_kind, expr_backend))
     _assert_bytes_equal(_chain(kind, le, ld).collect(),
                         _chain(kind, we, wd).collect())
 
 
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
 @pytest.mark.parametrize("threshold,algo_counter", [
     (2 << 30, "broadcast_joins"),
     (0, "hash_partition_joins"),
 ])
-def test_both_join_algorithms_equivalent(threshold, algo_counter):
+def test_both_join_algorithms_equivalent(threshold, algo_counter,
+                                         worker_kind):
+    # _sessions applies the threshold to BOTH sessions, so local and
+    # workers price the join identically
     (ls, le, ld), (ws, we, wd) = _sessions(
-        broadcast_threshold_bytes=threshold)
-    # independent local session with the matching threshold
-    ls = Session(num_partitions=3, broadcast_threshold_bytes=threshold)
-    emps, deps = _emps()
-    le = ls.load("emps", emps, type_name="Emp")
-    ld = ls.load("deps", deps, type_name="Dep")
+        broadcast_threshold_bytes=threshold, **transport_kw(worker_kind))
     _assert_bytes_equal(_chain("join", le, ld).collect(),
                         _chain("join", we, wd).collect())
     assert getattr(ls.executor.stats, algo_counter) == 1
@@ -113,13 +160,16 @@ def test_both_join_algorithms_equivalent(threshold, algo_counter):
         == ws.executor.stats.shuffle_bytes
 
 
-def test_tpch_entry_points_equivalence():
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
+def test_tpch_entry_points_equivalence(worker_kind):
     from repro.apps.tpch import (customers_per_supplier, load_tpch,
                                  topk_jaccard)
+    from repro.data.synthetic import denormalized_tpch
     cust, lines, n_supp, n_parts = denormalized_tpch(160, seed=2)
     results = []
     for kw in ({"num_partitions": 4},
-               {"backend": "workers", "num_workers": 4}):
+               {"backend": "workers", "num_workers": 4,
+                **transport_kw(worker_kind)}):
         sess = Session(**kw)
         _, ln = load_tpch(sess.store, cust, lines, session=sess)
         cps = customers_per_supplier(sess.store, ln, n_parts, session=sess)
@@ -137,8 +187,25 @@ def test_tpch_entry_points_equivalence():
     assert sc_l.tobytes() == sc_w.tobytes()
 
 
-def test_single_worker_degenerate():
-    (ls, le, ld), (ws, we, wd) = _sessions(num_partitions=1)
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
+@pytest.mark.parametrize("N", [1, 2, 4])
+def test_worker_counts_equivalent(N, worker_kind):
+    """N ∈ {1, 2, 4} (including the degenerate single worker, where every
+    exchange is a self-loop except the OUTPUT gather) — byte-identical on
+    the shuffle-heavy join chain for every transport."""
+    (ls, le, ld), (ws, we, wd) = _sessions(
+        num_partitions=N, broadcast_threshold_bytes=0,
+        **transport_kw(worker_kind))
+    assert ws.executor.P == N
+    _assert_bytes_equal(_chain("join", le, ld).collect(),
+                        _chain("join", we, wd).collect())
+    assert len(ws.executor.worker_stats) == N
+
+
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
+def test_single_worker_degenerate(worker_kind):
+    (ls, le, ld), (ws, we, wd) = _sessions(
+        num_partitions=1, **transport_kw(worker_kind))
     assert ws.executor.P == 1
     for kind in ("join", "agg", "topk"):
         _assert_bytes_equal(_chain(kind, le, ld).collect(),
@@ -146,15 +213,17 @@ def test_single_worker_degenerate():
     assert len(ws.executor.worker_stats) == 1
 
 
-@pytest.mark.skipif(sys.platform == "win32"
-                    or "fork" not in multiprocessing.get_all_start_methods(),
-                    reason="fork start method unavailable")
-def test_fork_worker_kind_equivalence():
-    (ls, le, ld), (ws, we, wd) = _sessions(worker_kind="fork")
+@pytest.mark.parametrize("worker_kind",
+                         ["fork", pytest.param("socket",
+                                               marks=pytest.mark.socket)])
+def test_process_worker_kinds_cross_real_boundaries(worker_kind):
+    """Fork and socket workers move page blocks across real process (and
+    for socket: real TCP) boundaries — equivalence plus nonzero measured
+    traffic."""
+    (ls, le, ld), (ws, we, wd) = _sessions(**transport_kw(worker_kind))
     local = _chain("agg", le, ld).collect()
     dist = _chain("agg", we, wd).collect()
     _assert_bytes_equal(local, dist)
-    # page blocks crossed a real process boundary
     assert ws.executor.stats.shuffle_bytes > 0
 
 
@@ -164,17 +233,32 @@ def test_explain_reports_per_worker_shuffle_bytes():
     ds.collect()
     text = ds.explain()
     assert "workers x2" in text
+    assert "via thread" in text
     assert "per-worker shuffle_bytes" in text
+    assert "transport=thread" in text
     assert f"shuffle_bytes={ws.executor.stats.shuffle_bytes}" in text
+
+
+@pytest.mark.socket
+def test_explain_reports_socket_transport():
+    """The satellite fix: the transport kind is reported next to the
+    per-worker shuffle_bytes."""
+    if not fork_available():
+        pytest.skip("fork start method unavailable")
+    (_, _, _), (ws, we, wd) = _sessions(num_partitions=2,
+                                        worker_kind="socket")
+    ds = _chain("agg", we, wd)
+    ds.collect()
+    text = ds.explain()
+    assert "workers x2 via socket" in text
+    assert "transport=socket" in text
 
 
 @pytest.mark.parametrize("kind", ["thread", "fork"])
 def test_worker_failure_surfaces_as_driver_error(kind):
     import threading
     import time
-    if kind == "fork" and (
-            sys.platform == "win32"
-            or "fork" not in multiprocessing.get_all_start_methods()):
+    if kind == "fork" and not fork_available():
         pytest.skip("fork start method unavailable")
     sess = Session(backend="workers", num_workers=2, worker_kind=kind)
     emps, _ = _emps(40)
@@ -245,3 +329,34 @@ def test_session_backend_validation():
     from repro.core import NaiveExecutor
     with pytest.raises(ValueError, match="chooses its own executor"):
         Session(backend="workers", executor_cls=NaiveExecutor)
+    # ---- socket-transport combinations (the satellite build-time rules)
+    with pytest.raises(ValueError, match="unknown worker_kind"):
+        Session(backend="workers", worker_kind="carrier-pigeon")
+    # jax cannot cross the fork that spawns default socket workers —
+    # refused at build time, pointing at the thread-launched data plane
+    with pytest.raises(ValueError, match="socket_launch='thread'"):
+        Session(backend="workers", worker_kind="socket",
+                expr_backend="jax")
+    # ... which is accepted
+    s = Session(backend="workers", worker_kind="socket",
+                expr_backend="jax", socket_launch="thread")
+    assert s.executor.socket_launch == "thread"
+    with pytest.raises(ValueError, match="unknown socket_launch"):
+        Session(backend="workers", worker_kind="socket",
+                socket_launch="udp")
+    # socket knobs are meaningless off the socket transport / backend
+    with pytest.raises(ValueError, match="only apply to"):
+        Session(backend="workers", worker_kind="thread",
+                socket_launch="thread")
+    with pytest.raises(ValueError, match="only apply to"):
+        Session(socket_launch="thread")
+    with pytest.raises(ValueError, match="only apply to"):
+        Session(socket_addr=("127.0.0.1", 5555))
+    # external workers need a dialable rendezvous and a known world size
+    with pytest.raises(ValueError, match="explicit num_workers"):
+        Session(backend="workers", worker_kind="socket",
+                socket_launch="connect",
+                socket_addr=("127.0.0.1", 5555))
+    with pytest.raises(ValueError, match="nonzero port"):
+        Session(backend="workers", worker_kind="socket", num_workers=2,
+                socket_launch="connect")

@@ -1,0 +1,401 @@
+"""Fault injection for the socket transport.
+
+Two failure families the multi-host story must survive:
+
+* a worker **process dying without a goodbye** (crashed host, OOM kill)
+  mid-shuffle, while its peers are blocked in ``recv`` on data that will
+  never arrive — the driver's pump observes the dead connection, the
+  query fails fast, and the ABORT broadcast unwinds every surviving peer
+  well inside the deadline (no 30 s join stall, no leaked processes);
+* a **corrupt or truncated byte stream** — the framing layer raises a
+  clean :class:`ProtocolError` instead of deadlocking in a short read or
+  mis-framing the next message (length-prefixed framing cannot resync,
+  so the error must surface immediately and name the problem).
+
+Also here: the external-worker rendezvous (`python -m repro.dist.worker
+--connect host:port`) exercised with real subprocesses on localhost, and
+its clean refusal to ship unpicklable native lambdas.
+"""
+import multiprocessing
+import os
+import socket
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Session, agg, make_lambda
+from repro.dist.protocol import (ProtocolError, decode_batch, decode_frame,
+                                 encode_batch, frame_buffers, read_frame,
+                                 write_frame)
+from repro.objectmodel.store import PagedStore
+from repro.objectmodel.vectorlist import VectorList
+
+from test_dist import fork_available  # one definition per test package
+
+pytestmark = pytest.mark.socket
+
+EMP_DT = np.dtype([("dept", np.int64), ("salary", np.int64)])
+DEP_DT = np.dtype([("deptkey", np.int64), ("rank", np.int64)])
+
+
+def _data(n=600, seed=5):
+    rng = np.random.default_rng(seed)
+    emps = np.zeros(n, EMP_DT)
+    emps["dept"] = rng.integers(0, 5, n)
+    emps["salary"] = rng.integers(1, 1000, n)
+    deps = np.zeros(5, DEP_DT)
+    deps["deptkey"] = np.arange(5)
+    deps["rank"] = np.arange(5) + 1
+    return emps, deps
+
+
+# ------------------------------------------------------- dead peer abort
+@pytest.mark.slow
+def test_killed_worker_mid_shuffle_unwinds_surviving_peers():
+    """Worker 1 exits with ``os._exit`` (no error frame, no goodbye —
+    indistinguishable from a crashed host) while its peers are mid-
+    hash-partition-shuffle, blocked in ``recv`` on its buckets. The
+    driver must surface the death as the query error and broadcast ABORT
+    so the survivors unwind — inside the deadline, leaving no live
+    worker processes behind."""
+    if not fork_available():
+        pytest.skip("fork start method unavailable")
+    emps, deps = _data()
+    # small pages so every worker's shard is non-empty (the victim must
+    # actually reach its kernel) and the join genuinely shuffles
+    sess = Session(store=PagedStore(page_size=1024), backend="workers",
+                   num_workers=3, worker_kind="socket",
+                   broadcast_threshold_bytes=0)
+    e = sess.load("emps", emps, type_name="Emp")
+    d = sess.load("deps", deps, type_name="Dep")
+
+    def kill_pred(rows):
+        if multiprocessing.current_process().name == "pc-worker-1":
+            os._exit(1)
+        return rows["salary"] > 0
+
+    bad = (e.filter(lambda r: make_lambda(r, kill_pred, "keep"))
+            .join(d, on=lambda r, s: r.dept == s.deptkey,
+                  project=lambda r, s: make_lambda(
+                      [r, s], lambda a, b: a["salary"] * b["rank"], "w")))
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="worker 1 .*(failed|died)"):
+        bad.collect()
+    assert time.monotonic() - t0 < 15
+    assert not [p for p in multiprocessing.active_children()
+                if p.name.startswith("pc-worker") and p.is_alive()]
+
+
+@pytest.mark.slow
+def test_worker_error_aborts_socket_query_within_deadline():
+    """The softer failure (a worker raising, reported over its own
+    connection) takes the same unwind path on the socket transport as on
+    thread/fork: driver error + ABORT, inside the deadline."""
+    if not fork_available():
+        pytest.skip("fork start method unavailable")
+    emps, _ = _data(200)
+    sess = Session(store=PagedStore(page_size=1024), backend="workers",
+                   num_workers=3, worker_kind="socket")
+    ds = sess.load("emps", emps, type_name="Emp")
+
+    def boom(rows):
+        if multiprocessing.current_process().name == "pc-worker-2":
+            raise RuntimeError("kernel exploded")
+        return rows["salary"]
+
+    bad = (ds.select(lambda r: make_lambda(r, boom, "boom"))
+             .aggregate(key=None, value=None))
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="worker 2 failed"):
+        bad.collect()
+    assert time.monotonic() - t0 < 15
+
+
+# --------------------------------------------------- framing fault paths
+def _tcp_pair():
+    """A real localhost TCP pair (not socketpair: the product path)."""
+    lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    a = socket.create_connection(lst.getsockname(), timeout=10)
+    b, _ = lst.accept()
+    lst.close()
+    b.settimeout(10)  # a framing bug must fail the test, not hang it
+    return a, b
+
+
+def _one_frame_bytes(n_rows=100, tag="3:L"):
+    msg = [encode_batch(VectorList({"x": np.arange(n_rows,
+                                                   dtype=np.int64)}))]
+    return b"".join(bytes(b) for b in frame_buffers(0, 1, tag, msg))
+
+
+def test_truncated_frame_raises_clean_protocol_error():
+    a, b = _tcp_pair()
+    blob = _one_frame_bytes()
+    a.sendall(blob[:len(blob) - 7])  # short read: body cut mid-payload
+    a.close()
+    with pytest.raises(ProtocolError, match="truncated"):
+        read_frame(b)
+    b.close()
+
+
+def test_truncated_prefix_raises_clean_protocol_error():
+    a, b = _tcp_pair()
+    a.sendall(_one_frame_bytes()[:5])  # died inside the length prefix
+    a.close()
+    with pytest.raises(ProtocolError, match="truncated"):
+        read_frame(b)
+    b.close()
+
+
+def test_valid_frame_then_truncation_is_not_misframed():
+    """A clean frame followed by a truncated one: the first decodes
+    exactly, the second raises — never silently returns garbage or
+    swallows bytes of the next message."""
+    a, b = _tcp_pair()
+    good = _one_frame_bytes(64, tag="7:R")
+    bad = _one_frame_bytes(32)
+    a.sendall(good + bad[:len(bad) // 2])
+    a.close()
+    src, dst, tag, msg = read_frame(b)
+    assert (src, dst, tag) == (0, 1, "7:R")
+    got = decode_batch(msg[0])
+    assert np.array_equal(np.asarray(got["x"]), np.arange(64))
+    with pytest.raises(ProtocolError, match="truncated"):
+        read_frame(b)
+    b.close()
+
+
+def test_garbage_magic_raises_protocol_error():
+    a, b = _tcp_pair()
+    a.sendall(b"HTTP/1.1 200 OK\r\n" + b"\x00" * 32)
+    a.close()
+    with pytest.raises(ProtocolError, match="magic"):
+        read_frame(b)
+    b.close()
+
+
+def test_implausible_lengths_fail_fast_without_allocating():
+    from repro.dist.protocol import _PREFIX, PROTO_MAGIC
+    # a corrupt body length must not attempt a 2**50-byte recv buffer
+    bogus = _PREFIX.pack(PROTO_MAGIC, 16, 1 << 50)
+    with pytest.raises(ProtocolError, match="implausible"):
+        decode_frame(bogus + b"\x00" * 64)
+    bogus = _PREFIX.pack(PROTO_MAGIC, 0, 0)
+    with pytest.raises(ProtocolError, match="implausible"):
+        decode_frame(bogus)
+
+
+def test_corrupt_length_below_cap_fails_on_short_read_not_oom():
+    """A flipped high byte claiming a 256 GiB body passes the sanity cap
+    but must fail as a clean truncation when the connection closes —
+    the body buffer grows progressively with arriving bytes, so the
+    corrupt length never drives a garbage-sized up-front allocation."""
+    from repro.dist.protocol import _PREFIX, PROTO_MAGIC
+    a, b = _tcp_pair()
+    a.sendall(_PREFIX.pack(PROTO_MAGIC, 4, 1 << 38) + b"\x80\x04N."
+              + b"\x00" * 100)
+    a.close()
+    t0 = time.monotonic()
+    with pytest.raises(ProtocolError, match="truncated"):
+        read_frame(b)
+    assert time.monotonic() - t0 < 5
+    b.close()
+
+
+def test_clean_eof_at_frame_boundary_reads_as_none():
+    a, b = _tcp_pair()
+    a.sendall(_one_frame_bytes(8))
+    a.close()
+    assert read_frame(b) is not None
+    assert read_frame(b) is None  # closed exactly between frames
+    b.close()
+
+
+def test_undecodable_header_raises_protocol_error():
+    from repro.dist.protocol import _PREFIX, PROTO_MAGIC
+    junk = b"\x93\x13\x37" * 5
+    blob = _PREFIX.pack(PROTO_MAGIC, len(junk), 0) + junk
+    with pytest.raises(ProtocolError, match="header"):
+        decode_frame(blob)
+
+
+# ------------------------------------------------- external workers (TCP)
+def _free_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+@pytest.mark.slow
+def test_external_connect_workers_byte_identical(tmp_path):
+    """The two-terminal demo, automated: a connect-mode driver plus two
+    `python -m repro.dist.worker --connect` subprocesses on localhost.
+    The shipped program / plan / shard pages must reproduce the local
+    backend byte-for-byte, and the workers must exit cleanly."""
+    rng = np.random.default_rng(7)
+    recs = np.zeros(500, EMP_DT)
+    recs["dept"] = rng.integers(0, 8, 500)
+    recs["salary"] = rng.integers(30_000, 120_000, 500)
+
+    def q(e):
+        return (e.filter(lambda r: r.salary > 50_000)
+                 .group_by("dept")
+                 .agg(total=agg.sum("salary"), n=agg.count(),
+                      avg=agg.mean("salary")))
+
+    ls = Session(num_partitions=2)
+    local = q(ls.load("emps", recs, type_name="Emp")).collect()
+
+    port = _free_port()
+    ws = Session(backend="workers", num_workers=2, worker_kind="socket",
+                 socket_launch="connect", socket_addr=("127.0.0.1", port))
+    we = ws.load("emps", recs, type_name="Emp")
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ,
+           "PYTHONPATH": src_dir + os.pathsep
+           + os.environ.get("PYTHONPATH", "")}
+    workers = [subprocess.Popen(
+        [sys.executable, "-m", "repro.dist.worker",
+         "--connect", f"127.0.0.1:{port}", "--retry-seconds", "30"],
+        env=env) for _ in range(2)]
+    try:
+        got = q(we).collect()
+        for p in workers:
+            assert p.wait(timeout=30) == 0
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+    assert set(local) == set(got)
+    for c in local:
+        assert np.asarray(local[c]).tobytes() \
+            == np.asarray(got[c]).tobytes(), c
+    assert ws.executor.stats.shuffle_bytes > 0
+
+
+@pytest.mark.slow
+def test_connect_workers_string_keys_stable_across_hash_salts():
+    """Shuffle routing on str/bytes keys must not depend on Python's
+    per-process hash salt: two external workers launched with different
+    PYTHONHASHSEED values must still route every key to the same
+    destination (regression — salted `hash()` in split_by_key_hash and
+    hash_col silently split byte-keyed groups across connect workers,
+    emitting duplicated rows with partial sums)."""
+    rng = np.random.default_rng(9)
+    dt = np.dtype([("name", "S8"), ("v", np.int64)])
+    recs = np.zeros(800, dt)
+    names = np.array([f"key{i}".encode() for i in range(37)])
+    recs["name"] = names[rng.integers(0, 37, 800)]
+    recs["v"] = rng.integers(0, 1000, 800)
+
+    def q(e):
+        return e.group_by("name").agg(total=agg.sum("v"), n=agg.count())
+
+    ls = Session(num_partitions=2)
+    local = q(ls.load("t", recs, type_name="T")).collect()
+    port = _free_port()
+    ws = Session(backend="workers", num_workers=2, worker_kind="socket",
+                 socket_launch="connect", socket_addr=("127.0.0.1", port))
+    we = ws.load("t", recs, type_name="T")
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    workers = []
+    for seed in ("0", "12345"):  # deliberately different hash salts
+        env = {**os.environ, "PYTHONHASHSEED": seed,
+               "PYTHONPATH": src_dir + os.pathsep
+               + os.environ.get("PYTHONPATH", "")}
+        workers.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.dist.worker",
+             "--connect", f"127.0.0.1:{port}", "--retry-seconds", "30"],
+            env=env))
+    try:
+        got = q(we).collect()
+        for p in workers:
+            assert p.wait(timeout=30) == 0
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+    assert len(np.asarray(got["name"])) == 37  # one row per group
+    for c in local:
+        assert np.asarray(local[c]).tobytes() \
+            == np.asarray(got[c]).tobytes(), c
+
+
+def test_connect_mode_refuses_unpicklable_native_lambdas():
+    """Native lambdas exist only in-process; shipping them to another
+    host is impossible — the driver must say so at submit time instead
+    of failing obscurely in a worker."""
+    recs = np.zeros(10, EMP_DT)
+    ws = Session(backend="workers", num_workers=2, worker_kind="socket",
+                 socket_launch="connect",
+                 socket_addr=("127.0.0.1", _free_port()))
+    we = ws.load("emps", recs, type_name="Emp")
+    bad = we.select(lambda r: make_lambda(r, lambda rows: rows["salary"],
+                                          "x"))
+    with pytest.raises(ValueError, match="native"):
+        bad.collect()
+
+
+def test_invalid_destination_frame_fails_query_cleanly():
+    """A version-skewed peer addressing a rank outside this query's P
+    must fail the query with a named error — not kill the routing pump
+    silently (hanging collect) or negative-index into another worker's
+    queue."""
+    import threading
+    from repro.dist.driver import DistributedExecutor
+    from repro.dist.worker import connect_worker
+    port = _free_port()
+    store = PagedStore()
+    store.send_data("emps", np.zeros(10, EMP_DT))
+    ex = DistributedExecutor(store, num_workers=1, worker_kind="socket",
+                             socket_launch="connect",
+                             socket_addr=("127.0.0.1", port),
+                             socket_accept_timeout=15.0)
+    sess = Session(num_partitions=1)
+    ds = (sess.read("emps", "Emp")
+          .filter(lambda r: r.salary >= 0).select(lambda r: r.salary))
+
+    def rogue():
+        sock, _w = connect_worker(("127.0.0.1", port), retry_seconds=10.0)
+        try:
+            read_frame(sock)  # SETUP — discard, we are not a real worker
+            write_frame(sock, 0, 5, "0:bogus", None)  # dst outside P=1
+            read_frame(sock)  # wait for the driver to drop us
+        except ProtocolError:
+            pass
+        finally:
+            sock.close()
+
+    t = threading.Thread(target=rogue, daemon=True)
+    t.start()
+    with pytest.raises(RuntimeError, match="invalid destination"):
+        ex.execute(ds._build_sink())
+    t.join(timeout=15)
+
+
+@pytest.mark.slow
+def test_rendezvous_times_out_when_workers_never_come():
+    """A connect-mode driver whose workers never dial must fail with a
+    rendezvous timeout naming the shortfall — not hang forever."""
+    from repro.dist.driver import DistributedExecutor
+    recs = np.zeros(10, EMP_DT)
+    store = PagedStore()
+    store.send_data("emps", recs)
+    ex = DistributedExecutor(store, num_workers=2, worker_kind="socket",
+                             socket_launch="connect",
+                             socket_addr=("127.0.0.1", _free_port()),
+                             socket_accept_timeout=2.0)
+    sess = Session(num_partitions=2)  # only to build the program
+    ds = sess.read("emps", "Emp")
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="rendezvous timed out"):
+        ex.execute(ds.filter(lambda r: r.salary > 0)
+                   .select(lambda r: r.salary)._build_sink())
+    assert time.monotonic() - t0 < 10

@@ -15,6 +15,9 @@
                                   bytes)
   dist     -> bench_dist         (workers backend vs local sim; real
                                   page-serialized shuffle bytes vs N)
+  analysis -> bench_analysis     (planlint wall-time vs compile budget;
+                                  shuffle bytes with/without the
+                                  redundant-exchange elision)
   §Roofline -> roofline          (from dry-run artifacts, if present)
 """
 from __future__ import annotations
@@ -24,9 +27,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_agg, bench_api, bench_dist, bench_expr,
-                            bench_kernels, bench_linalg, bench_ml,
-                            bench_oo, bench_objectmodel)
+    from benchmarks import (bench_agg, bench_analysis, bench_api,
+                            bench_dist, bench_expr, bench_kernels,
+                            bench_linalg, bench_ml, bench_oo,
+                            bench_objectmodel)
     suites = [
         ("linalg", bench_linalg.run),
         ("oo", bench_oo.run),
@@ -37,6 +41,7 @@ def main() -> None:
         ("expr", bench_expr.run),
         ("agg", bench_agg.run),
         ("dist", bench_dist.run),
+        ("analysis", bench_analysis.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

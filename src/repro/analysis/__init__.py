@@ -1,0 +1,21 @@
+"""planlint — compile-time static analysis over TCAP plans.
+
+Three passes (schema/dtype dataflow, partitioning-property propagation,
+capability & fusion checking) producing structured
+:class:`~repro.analysis.diagnostics.Diagnostic` findings with stable
+codes. Surfaces: ``Dataset.check()``, ``Dataset.explain(
+diagnostics=True)``, and ``python -m repro.analysis`` over the bundled
+apps. Every plan the Session executes must analyze clean at error
+severity.
+"""
+from repro.analysis.analyzer import analyze
+from repro.analysis.capability import (BuildConfig, capability_diagnostics,
+                                       check_session_config,
+                                       check_worker_config)
+from repro.analysis.diagnostics import AnalysisReport, Diagnostic
+from repro.analysis.partitioning import propagate_partitioning
+from repro.analysis.schema_pass import schema_pass
+
+__all__ = ["AnalysisReport", "BuildConfig", "Diagnostic", "analyze",
+           "capability_diagnostics", "check_session_config",
+           "check_worker_config", "propagate_partitioning", "schema_pass"]

@@ -1,0 +1,114 @@
+"""The analyzer orchestrator: run every pass over one optimized program
+and fold the findings into a single :class:`~repro.analysis.diagnostics
+.AnalysisReport`.
+
+``analyze()`` is what ``Dataset.check()``, ``explain(diagnostics=True)``,
+the ``python -m repro.analysis`` CLI, and the Session's execution gate all
+call — one entry point, so a plan the gate accepts is exactly a plan the
+inspection surfaces report clean at error severity.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.analysis.capability import BuildConfig, capability_diagnostics
+from repro.analysis.diagnostics import AnalysisReport, Diagnostic, op_path
+from repro.analysis.partitioning import propagate_partitioning
+from repro.analysis.schema_pass import schema_pass
+from repro.core.exprc import FusedStage, build_steps, schedule_jax_run
+from repro.core.tcap import TCAPProgram
+
+__all__ = ["analyze"]
+
+
+def _join_algo_by_index(prog: TCAPProgram, plan) -> Optional[Dict[int, str]]:
+    if plan is None:
+        return None
+    return {i: plan.join_algo.get(id(op), "hash_partition")
+            for i, op in enumerate(prog.ops) if op.op == "JOIN"}
+
+
+def _fusion_diagnostics(prog: TCAPProgram, edge_dtypes,
+                        expr_backend: str) -> List[Diagnostic]:
+    """Pass 3b — what breaks fusion runs (PL401) and, on the jax backend,
+    which fused runs bounce back to the host after their jitted core
+    (PL402). The interp backend never fuses, so it gets neither."""
+    diags: List[Diagnostic] = []
+    if expr_backend == "interp":
+        return diags
+    for i, op in enumerate(prog.ops):
+        if op.op == "APPLY" and op.info.get("type") == "native":
+            diags.append(Diagnostic(
+                "PL401", "info",
+                f"fusion barrier: native lambda {op.info.get('name', op.stage)!r} "
+                "is opaque to the stage compiler — the pipelined run splits "
+                "here and intermediate vector lists materialize", op_path(i, op)))
+        elif op.op == "FLATTEN":
+            diags.append(Diagnostic(
+                "PL401", "info",
+                "fusion barrier: FLATTEN re-shapes the row space and cannot "
+                "join a fused run", op_path(i, op)))
+    if expr_backend != "jax":
+        return diags
+    # walk the compiled step plan with op indices preserved (the worker
+    # runtime's convention) so PL402 lands on the run's first op
+    steps = build_steps(prog, "jax")
+    i = -1
+    for step in steps:
+        if not isinstance(step, FusedStage):
+            i += 1
+            continue
+        first = i + 1
+        i += len(step.ops)
+        ir = step.ir
+        in_dts = [edge_dtypes.get((step.in_list, c)) for c in ir.in_cols]
+        if any(d is None for d in in_dts):
+            continue  # inference gave up upstream; nothing sound to say
+        status, _ = schedule_jax_run(
+            ir, [np.zeros(0, d) for d in in_dts])
+        n_core = sum(1 for ins in ir.instrs if status[ins.out] == "jit")
+        n_post = sum(1 for ins in ir.instrs if status[ins.out] == "post")
+        if n_core and n_post:
+            kinds = sorted({ins.kind for ins in ir.instrs
+                            if status[ins.out] == "post"})
+            diags.append(Diagnostic(
+                "PL402", "info",
+                f"host-device round-trip: {n_post} instruction(s) "
+                f"({', '.join(kinds)}) return to the host after the jitted "
+                f"core of this fused run — non-jaxable dtypes or host-only "
+                "stages downstream of device values",
+                op_path(first, prog.ops[first])))
+    return diags
+
+
+def analyze(prog: TCAPProgram, store=None, plan=None,
+            config: Optional[BuildConfig] = None,
+            expr_backend: Optional[str] = None) -> AnalysisReport:
+    """Run schema/dtype dataflow, partitioning propagation, and the
+    capability + fusion rules over one (optimized) TCAP program.
+
+    ``store`` resolves SCAN dtypes for untyped sets; ``plan`` (a
+    :class:`~repro.core.physical.PhysicalPlan`) feeds the partitioning
+    pass the join-algorithm decisions; ``config`` enables the build-config
+    capability rules. All three are optional — passes degrade
+    conservatively without them."""
+    if expr_backend is None:
+        expr_backend = config.expr_backend if config is not None else "numpy"
+    diags, edge_dtypes, output_schema = schema_pass(prog, store)
+    part = propagate_partitioning(prog, _join_algo_by_index(prog, plan))
+    diags = list(diags) + list(part.diagnostics)
+    diags += capability_diagnostics(prog, config)
+    diags += _fusion_diagnostics(prog, edge_dtypes, expr_backend)
+    order = {"error": 0, "warning": 1, "info": 2}
+    diags.sort(key=lambda d: (order[d.severity], d.op_path, d.code))
+    # PL201 states the *finding* (the exchange is provably redundant) and
+    # stays either way; elided_exchanges states the *action* — what this
+    # plan will actually skip (empty when the session disables elision)
+    elided = part.redundant
+    if plan is not None:
+        elided = tuple(i for i, op in enumerate(prog.ops)
+                       if id(op) in plan.agg_elide)
+    return AnalysisReport(diagnostics=diags, output_schema=output_schema,
+                          elided_exchanges=elided)

@@ -1,0 +1,163 @@
+"""Pass 2 — partitioning-property propagation and redundant-exchange
+detection.
+
+The AGG exchange routes each pre-aggregated group by
+``stable_key_hash(key tuple) % P`` (:meth:`~repro.core.relops.AggMap
+.split_by_key_hash`). Its *output* is therefore a stream hash-partitioned
+on the ordered key tuple by that hash family — a fact this pass threads
+forward through the pipelined ops:
+
+* APPLY/FILTER/HASH/FLATTEN keep rows in place — the fact survives;
+* a broadcast JOIN keeps probe-side rows in place — the probe fact
+  survives (the build side is replicated, its facts do not);
+* a hash-partition JOIN re-routes both sides by ``hash_col % P`` — a
+  *different* hash family, so incoming ``stable_key_hash`` facts die (the
+  two families must never satisfy each other's placement);
+* TOPK gathers to one rank — facts die.
+
+Column *values* are tracked by structural value ids so the fact follows
+the value, not the column name: an AGG key packed into a record column
+(the ``pack`` stage the compiler inserts between chained aggregations)
+and re-extracted by ``attAccess`` resolves back to the original key's id.
+
+Where a downstream AGG's ordered key-id tuple equals a live fact, its
+exchange is redundant: every partition's partial map already holds only
+keys routing to itself, so split+merge is the identity permutation — the
+optimizer elides the exchange with byte-identical results (**PL201**).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.diagnostics import Diagnostic, op_path
+from repro.core.relops import AggSpec
+from repro.core.tcap import TCAPProgram
+
+__all__ = ["propagate_partitioning", "PartitioningResult"]
+
+
+class PartitioningResult:
+    """``redundant``: AGG op indices whose exchange a live fact satisfies;
+    ``diagnostics``: one PL201 per such op; ``facts``: the surviving fact
+    (ordered key value-id tuple) per list name, for explain/debugging."""
+
+    def __init__(self, redundant: Tuple[int, ...],
+                 diagnostics: List[Diagnostic],
+                 facts: Dict[str, Optional[Tuple]]):
+        self.redundant = redundant
+        self.diagnostics = diagnostics
+        self.facts = facts
+
+
+def propagate_partitioning(prog: TCAPProgram,
+                           join_algo_by_index: Optional[Dict[int, str]]
+                           = None) -> PartitioningResult:
+    """``join_algo_by_index`` maps JOIN op index -> "broadcast" |
+    "hash_partition" (from the physical plan). Without it every JOIN is
+    assumed hash-partitioned — the conservative choice: facts die."""
+    vid: Dict[Tuple[str, str], Tuple] = {}  # (list, col) -> value id
+    fact: Dict[str, Optional[Tuple]] = {}   # list -> ordered key-vid tuple
+    redundant: List[int] = []
+    diags: List[Diagnostic] = []
+
+    def gv(lst: str, col: str) -> Tuple:
+        # defensive: an edge the walk never defined still gets a stable,
+        # per-column id (same column -> same value, so this stays sound)
+        return vid.get((lst, col), ("missing", lst, col))
+
+    def copy_vids(op) -> None:
+        for c in op.copy_cols:
+            vid[(op.out, c)] = gv(op.in_list, c)
+        for c in op.copy_cols2:
+            vid[(op.out, c)] = gv(op.in_list2, c)
+
+    for i, op in enumerate(prog.ops):
+        if op.op == "SCAN":
+            vid[(op.out, op.out_cols[0])] = ("scan", i)
+            fact[op.out] = None
+            continue
+        if op.op == "APPLY":
+            copy_vids(op)
+            if (newc := op.new_cols):
+                t = op.info.get("type")
+                ins = tuple(gv(op.in_list, c) for c in op.apply_cols)
+                if t == "rename":
+                    v = ins[0]
+                elif t == "attAccess":
+                    base = ins[0]
+                    att = op.info["attName"]
+                    if base[0] == "pack" and att in base[1]:
+                        # re-extracting a packed field resolves to the
+                        # original value — the chained-AGG key path
+                        v = base[2][base[1].index(att)]
+                    else:
+                        v = ("att", base, att)
+                elif t == "pack":
+                    names = tuple(op.info["fields"].split(","))
+                    v = ("pack", names, ins)
+                elif t == "const":
+                    # repr, not the raw value: array-valued constants must
+                    # not leak elementwise == into fact comparison
+                    val = op.info["value"]
+                    v = ("const", type(val).__name__, repr(val))
+                elif t == "methodCall":
+                    v = ("method", op.info["onType"],
+                         op.info["methodName"], ins)
+                elif t in ("cmp", "bool", "arith"):
+                    v = (t, op.info.get("op"), ins)
+                else:  # native and anything future: a fresh opaque value
+                    v = ("opaque", i)
+                vid[(op.out, newc[0])] = v
+            fact[op.out] = fact.get(op.in_list)
+        elif op.op in ("FILTER", "HASH"):
+            copy_vids(op)
+            if op.op == "HASH":
+                vid[(op.out, op.new_cols[0])] = (
+                    "hash", gv(op.in_list, op.apply_cols[0]))
+            # filtering/annotating keeps every row in its partition
+            fact[op.out] = fact.get(op.in_list)
+        elif op.op == "FLATTEN":
+            copy_vids(op)
+            vid[(op.out, op.out_cols[0])] = (
+                "flat", gv(op.in_list, op.apply_cols[0]))
+            # expanded rows inherit their source row's partition, and the
+            # copied key values repeat in place — the fact survives
+            fact[op.out] = fact.get(op.in_list)
+        elif op.op == "JOIN":
+            copy_vids(op)
+            algo = ((join_algo_by_index or {}).get(i, "hash_partition"))
+            if algo == "broadcast":
+                # probe rows never move; build side is replicated
+                fact[op.out] = fact.get(op.in_list)
+            else:
+                # both sides re-routed by hash_col % P — a different hash
+                # family than stable_key_hash, so no fact survives
+                fact[op.out] = None
+        elif op.op == "AGG":
+            spec = AggSpec.from_op(op)
+            kvids = tuple(gv(op.in_list, c) for c in spec.key_cols(op))
+            live = fact.get(op.in_list)
+            if (live is not None and live == kvids
+                    and not any(v[0] == "opaque" for v in kvids)):
+                redundant.append(i)
+                diags.append(Diagnostic(
+                    "PL201", "info",
+                    "redundant exchange: input is already hash-partitioned "
+                    f"on {list(spec.key_names)} by stable_key_hash — the "
+                    "AGG shuffle is the identity permutation and is elided",
+                    op_path(i, op)))
+            for kname, kv in zip(spec.key_names, kvids):
+                vid[(op.out, kname)] = kv
+            for name in spec.out_names:
+                vid[(op.out, name)] = ("agg", i, name)
+            # the exchange leaves (or elision keeps) every group on the
+            # rank its key hashes to: the output carries the fact
+            fact[op.out] = kvids
+        elif op.op == "TOPK":
+            for c in op.out_cols:
+                vid[(op.out, c)] = ("topk", i, c)
+            fact[op.out] = None  # global gather to one rank
+        elif op.op == "OUTPUT":
+            fact[op.out] = fact.get(op.in_list)
+
+    return PartitioningResult(tuple(redundant), diags, fact)

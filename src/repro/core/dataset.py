@@ -417,9 +417,21 @@ class Dataset:
                 f"{sorted(result)}; use collect()")
         return next(iter(result.values()))
 
-    def explain(self) -> str:
-        """Render the optimized TCAP program + physical plan (no execution)."""
-        return self._session._explain(self)
+    def explain(self, diagnostics: bool = False) -> str:
+        """Render the optimized TCAP program + physical plan (no
+        execution). With ``diagnostics=True``, the planlint report —
+        structured findings plus the inferred output schema — is appended.
+        Unlike ``collect()``, explain never refuses a plan: a query the
+        analyzer gates on can still be inspected here."""
+        return self._session._explain(self, diagnostics=diagnostics)
+
+    def check(self):
+        """Run the compile-time analyzer (planlint) over this query under
+        the session's configuration and return the
+        :class:`~repro.analysis.diagnostics.AnalysisReport` — schema/dtype
+        inference, partitioning facts and elided exchanges, capability and
+        fusion findings. Never executes and never raises on findings."""
+        return self._session._check(self)
 
     @property
     def output_set(self) -> Optional[str]:

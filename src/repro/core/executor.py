@@ -56,6 +56,7 @@ class ExecStats:
     shuffle_bytes: int = 0
     broadcast_joins: int = 0
     hash_partition_joins: int = 0
+    exchanges_elided: int = 0
     optimizer: Optional[OptimizerReport] = None
 
 
@@ -132,7 +133,9 @@ class Executor:
                                           data[op.in_list2],
                                           plan.join_algo.get(id(op), "hash_partition"))
             elif op.op == "AGG":
-                data[op.out] = self._aggregate(op, data[op.in_list])
+                data[op.out] = self._aggregate(
+                    op, data[op.in_list],
+                    elide=id(op) in plan.agg_elide)
             elif op.op == "TOPK":
                 data[op.out] = self._topk(op, data[op.in_list])
             elif op.op == "OUTPUT":
@@ -198,7 +201,8 @@ class Executor:
         return [concat_batches(b) for b in buckets]
 
     # -------------------------------------------------------------- agg
-    def _aggregate(self, op: TCAPOp, parts) -> List[List[VectorList]]:
+    def _aggregate(self, op: TCAPOp, parts,
+                   elide: bool = False) -> List[List[VectorList]]:
         spec = AggSpec.from_op(op)
         kcols, acols = spec.key_cols(op), spec.acc_cols(op)
         # the jax backend pre-aggregates on device: one fused segment-
@@ -214,14 +218,22 @@ class Executor:
             m = AggMap(spec)
             m.absorb_batches(batches, kcols, acols, reducer=reducer)
             partials.append(m)
-        # shuffle partials by key hash, final merge + finalize per partition
-        finals = [AggMap(spec) for _ in range(self.P)]
-        for m in partials:
-            split = m.split_by_key_hash(self.P)
-            for p in range(self.P):
-                if split[p].data:
-                    self.stats.shuffle_bytes += split[p].nbytes()
-                    finals[p].merge(split[p])
+        # shuffle partials by key hash, final merge + finalize per partition;
+        # when the planner proved the input already stable_key_hash-
+        # partitioned on the key tuple, every partial holds only keys
+        # routing to itself — the split+merge is the identity permutation,
+        # so the partials *are* the finals and no bytes move
+        if elide:
+            self.stats.exchanges_elided += 1
+            finals = partials
+        else:
+            finals = [AggMap(spec) for _ in range(self.P)]
+            for m in partials:
+                split = m.split_by_key_hash(self.P)
+                for p in range(self.P):
+                    if split[p].data:
+                        self.stats.shuffle_bytes += split[p].nbytes()
+                        finals[p].merge(split[p])
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p, m in enumerate(finals):
             emitted = m.emit()

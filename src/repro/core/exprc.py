@@ -46,7 +46,7 @@ from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["FusedStage", "build_steps", "kernel_cache_info",
-           "reset_kernel_cache", "EXPR_BACKENDS"]
+           "reset_kernel_cache", "schedule_jax_run", "EXPR_BACKENDS"]
 
 EXPR_BACKENDS = ("interp", "numpy", "jax")
 
@@ -401,14 +401,16 @@ def _pad_to(arr: np.ndarray, n_pad: int) -> np.ndarray:
     return out
 
 
-def _compile_jax(ir: _RunIR, arrays: Tuple) -> Callable:
-    """Split the run into host prologue / one jitted numeric core / host
-    epilogue, scheduled statically from zero-row dtype propagation."""
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental import enable_x64
-
-    # ---- dtype propagation on zero-row slices
+def schedule_jax_run(ir: _RunIR, arrays: Sequence
+                     ) -> Tuple[Dict[int, str], Dict[int, Optional[np.dtype]]]:
+    """The jax backend's static schedule for one fused run: zero-row dtype
+    propagation, then each instruction assigned ``"pre"`` (host prologue),
+    ``"jit"`` (the single jitted numeric core) or ``"post"`` (host
+    epilogue — a host↔device round-trip after the core). Returns
+    ``(status per slot, dtype per slot)``. Pure numpy — shared between
+    :func:`_compile_jax` (which builds the kernel from it) and the static
+    analyzer's fusion pass (which diagnoses the round-trips, PL402),
+    so the diagnosis can never drift from what the kernel actually does."""
     probe: Dict[int, Any] = {i: np.asarray(a)[:0]
                              for i, a in enumerate(arrays)}
     dtypes: Dict[int, Optional[np.dtype]] = {
@@ -423,7 +425,6 @@ def _compile_jax(ir: _RunIR, arrays: Tuple) -> Callable:
             probe[ins.out] = None
             dtypes[ins.out] = None
 
-    # ---- static schedule: host_pre -> one jit core -> host_post
     JIT_KINDS = ("cmp", "bool", "arith")
     status: Dict[int, str] = {i: "pre" for i in range(ir.n_inputs)}
     for ins in ir.instrs:
@@ -438,6 +439,17 @@ def _compile_jax(ir: _RunIR, arrays: Tuple) -> Callable:
             status[ins.out] = "post"
         else:
             status[ins.out] = "pre"
+    return status, dtypes
+
+
+def _compile_jax(ir: _RunIR, arrays: Tuple) -> Callable:
+    """Split the run into host prologue / one jitted numeric core / host
+    epilogue, scheduled statically from zero-row dtype propagation."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    status, _dtypes = schedule_jax_run(ir, arrays)
 
     pre = [i for i in ir.instrs if status[i.out] == "pre"]
     core = [i for i in ir.instrs if status[i.out] == "jit"]

@@ -24,9 +24,22 @@ from repro.core.tcap import TCAPOp, TCAPProgram
 
 __all__ = ["optimize", "eliminate_redundant_applies",
            "push_filters_past_joins", "dead_column_elimination",
-           "OptimizerReport"]
+           "elide_redundant_exchanges", "OptimizerReport"]
 
 _CSEABLE = {"attAccess", "methodCall", "cmp", "bool", "arith", "const"}
+
+
+def elide_redundant_exchanges(prog: TCAPProgram,
+                              join_algo_by_index: Optional[Dict[int, str]]
+                              = None) -> Tuple[int, ...]:
+    """AGG op indices whose shuffle the partitioning analysis proved to be
+    the identity permutation (input already stable_key_hash-partitioned on
+    the key tuple) — the physical planner records them in
+    ``PhysicalPlan.agg_elide`` and executors skip the exchange. The rule
+    itself lives in the analyzer (:mod:`repro.analysis.partitioning`) so
+    the PL201 diagnostic and the optimization can never disagree."""
+    from repro.analysis.partitioning import propagate_partitioning
+    return propagate_partitioning(prog, join_algo_by_index).redundant
 
 
 @dataclasses.dataclass

@@ -35,6 +35,11 @@ class PhysicalPlan:
     join_algo: Dict[int, str]
     pipelines: List[List[TCAPOp]]
     estimates: Dict[str, float]  # list name -> estimated bytes
+    # AGG ops (keyed by id()) whose exchange the partitioning analysis
+    # proved redundant: the input is already stable_key_hash-partitioned
+    # on the key tuple, so the split+merge is the identity permutation
+    # and executors skip it (byte-identical results, zero shuffle)
+    agg_elide: frozenset = frozenset()
 
 
 def estimate_bytes(prog: TCAPProgram, list_name: str, store: PagedStore,
@@ -66,7 +71,8 @@ def estimate_bytes(prog: TCAPProgram, list_name: str, store: PagedStore,
 
 def plan_physical(prog: TCAPProgram, store: PagedStore,
                   broadcast_threshold: int = 2 << 30,
-                  num_partitions: Optional[int] = None) -> PhysicalPlan:
+                  num_partitions: Optional[int] = None,
+                  elide_exchanges: bool = True) -> PhysicalPlan:
     memo: Dict[str, float] = {}
     algo: Dict[int, str] = {}
     for op in prog.ops:
@@ -86,7 +92,14 @@ def plan_physical(prog: TCAPProgram, store: PagedStore,
                     choice = "hash_partition"
             algo[id(op)] = choice
 
-    return PhysicalPlan(algo, split_pipelines(prog), memo)
+    elide: frozenset = frozenset()
+    if elide_exchanges:
+        from repro.core.optimizer import elide_redundant_exchanges
+        join_by_index = {i: algo.get(id(op), "hash_partition")
+                         for i, op in enumerate(prog.ops) if op.op == "JOIN"}
+        elide = frozenset(id(prog.ops[i]) for i in
+                          elide_redundant_exchanges(prog, join_by_index))
+    return PhysicalPlan(algo, split_pipelines(prog), memo, agg_elide=elide)
 
 
 def split_pipelines(prog: TCAPProgram) -> List[List[TCAPOp]]:
@@ -113,7 +126,10 @@ def plan_to_wire(prog: TCAPProgram, plan: PhysicalPlan) -> Dict:
     program (:func:`split_pipelines`)."""
     algo = {i: plan.join_algo.get(id(op), "hash_partition")
             for i, op in enumerate(prog.ops) if op.op == "JOIN"}
-    return {"join_algo": algo, "estimates": dict(plan.estimates)}
+    elide = sorted(i for i, op in enumerate(prog.ops)
+                   if id(op) in plan.agg_elide)
+    return {"join_algo": algo, "estimates": dict(plan.estimates),
+            "agg_elide": elide}
 
 
 def plan_from_wire(prog: TCAPProgram, wire: Dict) -> PhysicalPlan:
@@ -121,4 +137,6 @@ def plan_from_wire(prog: TCAPProgram, wire: Dict) -> PhysicalPlan:
     ``prog`` (the one the ops' ids refer to)."""
     return PhysicalPlan(
         {id(prog.ops[i]): a for i, a in wire["join_algo"].items()},
-        split_pipelines(prog), dict(wire["estimates"]))
+        split_pipelines(prog), dict(wire["estimates"]),
+        agg_elide=frozenset(id(prog.ops[i])
+                            for i in wire.get("agg_elide", ())))

@@ -49,7 +49,7 @@ import numpy as np
 from repro.core.compiler import compile_graph
 from repro.core.dataset import Dataset, _Scan
 from repro.core.executor import Executor
-from repro.core.exprc import EXPR_BACKENDS, build_steps
+from repro.core.exprc import build_steps
 from repro.core.naming import NameScope
 from repro.core.optimizer import OptimizerReport, optimize
 from repro.core.physical import PhysicalPlan, plan_physical
@@ -75,6 +75,10 @@ class _CacheEntry:
     # expr_backend — pinned here so the warm path reuses kernel callables
     # with no lookups at all
     steps: Optional[list] = None
+    # the planlint report (repro.analysis) for optimized+physical, reset
+    # whenever the physical plan is re-derived (join algorithms and elided
+    # exchanges feed the partitioning/capability passes)
+    analysis: Optional[object] = None
 
 
 class Session:
@@ -91,36 +95,33 @@ class Session:
                  socket_launch: Optional[str] = None,
                  socket_addr: Optional[Tuple[str, int]] = None,
                  plan_cache_size: int = 64,
-                 expr_backend: str = "numpy"):
+                 expr_backend: str = "numpy",
+                 elide_exchanges: bool = True):
         self.store = store if store is not None else PagedStore()
         self.db = db
         self.scope = NameScope()
         self.do_optimize = do_optimize
         self.backend = backend
-        if expr_backend not in EXPR_BACKENDS:
-            raise ValueError(f"unknown expr_backend {expr_backend!r} "
-                             f"(expected one of {EXPR_BACKENDS})")
         self.expr_backend = expr_backend
+        self.elide_exchanges = elide_exchanges
+        # build-time configuration validation is an analyzer capability
+        # rule set (repro.analysis.capability) — one fixed rule order, the
+        # historical exception messages preserved verbatim. Imported here,
+        # not at module top: the analysis package imports repro.core
+        # submodules, and a module-level import both ways would cycle
+        # through the package inits.
+        from repro.analysis.capability import (BuildConfig,
+                                               check_session_config)
+        self._build_config = BuildConfig(
+            backend=backend, num_partitions=num_partitions,
+            num_workers=num_workers, worker_kind=worker_kind,
+            socket_launch=socket_launch, socket_addr=socket_addr,
+            expr_backend=expr_backend, plan_cache_size=plan_cache_size,
+            custom_executor=executor_cls is not Executor)
+        check_session_config(self._build_config)
         # the session drives optimization itself (through the plan cache),
         # so its executor always runs programs as given.
         if backend == "workers":
-            if executor_cls is not Executor:
-                raise ValueError(
-                    "backend='workers' chooses its own executor — drop the "
-                    "executor_cls argument")
-            if (num_partitions is not None and num_workers is not None
-                    and num_partitions != num_workers):
-                raise ValueError(
-                    f"num_partitions={num_partitions} and "
-                    f"num_workers={num_workers} disagree — the workers "
-                    "backend takes one worker per partition; pass just "
-                    "num_workers")
-            if (worker_kind == "socket" and socket_launch == "connect"
-                    and num_workers is None and num_partitions is None):
-                raise ValueError(
-                    "worker_kind='socket' with socket_launch='connect' "
-                    "needs an explicit num_workers — the driver must know "
-                    "how many external workers to await at the rendezvous")
             from repro.dist.driver import DistributedExecutor
             self.executor = DistributedExecutor(
                 self.store,
@@ -130,19 +131,7 @@ class Session:
                 write_outputs=False, worker_kind=worker_kind or "thread",
                 expr_backend=expr_backend, socket_launch=socket_launch,
                 socket_addr=socket_addr)
-        elif backend == "local":
-            if num_workers is not None:
-                raise ValueError(
-                    "num_workers only applies to backend='workers' "
-                    "(use num_partitions for the local simulation)")
-            if worker_kind is not None:
-                raise ValueError(
-                    "worker_kind only applies to backend='workers' "
-                    "(the local backend simulates partitions in-process)")
-            if socket_launch is not None or socket_addr is not None:
-                raise ValueError(
-                    "socket_launch/socket_addr only apply to "
-                    "backend='workers' with worker_kind='socket'")
+        else:
             self.executor = executor_cls(
                 self.store,
                 num_partitions=4 if num_partitions is None
@@ -150,11 +139,6 @@ class Session:
                 vector_rows=vector_rows, do_optimize=False,
                 broadcast_threshold_bytes=broadcast_threshold_bytes,
                 write_outputs=False, expr_backend=expr_backend)
-        else:
-            raise ValueError(f"unknown backend {backend!r} "
-                             "(expected 'local' or 'workers')")
-        if plan_cache_size < 1:
-            raise ValueError("plan_cache_size must be >= 1")
         self.plan_cache_size = plan_cache_size
         self._plan_cache: "OrderedDict[Tuple, _CacheEntry]" = OrderedDict()
         self.cache_hits = 0
@@ -241,29 +225,38 @@ class Session:
 
     def _plan(self, ds: Dataset):
         """Compile + optimize (plan-cached) + physically plan (cached per
-        store stats_version) + stage-compile (kernels pinned on the cache
-        entry). Returns ``(prog, report, physical_plan, steps)`` — the
-        latter two are None when optimization is off (the executor then
-        derives both itself)."""
+        store stats_version) + analyze (the planlint gate: a plan with
+        error-severity diagnostics is refused before execution) +
+        stage-compile (kernels pinned on the cache entry). Returns
+        ``(prog, report, physical_plan, steps)`` — the latter two are None
+        when optimization is off (the executor then derives both itself,
+        and the gate is skipped with it)."""
         prog = self._compile(ds)
         if not self.do_optimize:
             return prog, None, None, None
+        entry = self._entry_for(ds)
+        plan = self._physical_for(entry)
+        errors = self._analysis_for(entry, plan).errors()
+        if errors:
+            raise ValueError(errors[0].message)
+        return (self._rebind_output(entry.optimized, ds.output_set),
+                entry.report, plan, self._steps_for(entry))
+
+    def _entry_for(self, ds: Dataset) -> _CacheEntry:
         key = ds._sig
         entry = self._plan_cache.get(key)
         if entry is not None:
             self.cache_hits += 1
             self._plan_cache.move_to_end(key)  # LRU touch
         else:
-            opt, rep = optimize(prog)
+            opt, rep = optimize(ds._prog)
             self.cache_misses += 1
-            entry = _CacheEntry(prog, opt, rep)
+            entry = _CacheEntry(ds._prog, opt, rep)
             self._plan_cache[key] = entry
             while len(self._plan_cache) > self.plan_cache_size:
                 self._plan_cache.popitem(last=False)
                 self.cache_evictions += 1
-        return (self._rebind_output(entry.optimized, ds.output_set),
-                entry.report, self._physical_for(entry),
-                self._steps_for(entry))
+        return entry
 
     def _physical_for(self, entry: _CacheEntry) -> PhysicalPlan:
         """The physical plan cached alongside the logical one, re-derived
@@ -276,9 +269,37 @@ class Session:
         self.phys_misses += 1
         entry.physical = plan_physical(
             entry.optimized, self.store, self.executor.broadcast_threshold,
-            num_partitions=self.executor.P)
+            num_partitions=self.executor.P,
+            elide_exchanges=self.elide_exchanges)
         entry.stats_version = ver
+        entry.analysis = None  # join algos / elisions may have changed
         return entry.physical
+
+    def _analysis_for(self, entry: _CacheEntry, plan: PhysicalPlan):
+        """The planlint report cached with the plan (re-run only when the
+        physical plan re-derives)."""
+        if entry.analysis is None:
+            from repro.analysis import analyze
+            entry.analysis = analyze(
+                entry.optimized, store=self.store, plan=plan,
+                config=self._build_config, expr_backend=self.expr_backend)
+        return entry.analysis
+
+    def _check(self, ds: Dataset):
+        """``Dataset.check()``: the full planlint report for this query
+        under this session's configuration — never raises on findings."""
+        prog = self._compile(ds)
+        if not self.do_optimize:
+            from repro.analysis import analyze
+            plan = plan_physical(
+                prog, self.store, self.executor.broadcast_threshold,
+                num_partitions=self.executor.P,
+                elide_exchanges=self.elide_exchanges)
+            return analyze(prog, store=self.store, plan=plan,
+                           config=self._build_config,
+                           expr_backend=self.expr_backend)
+        entry = self._entry_for(ds)
+        return self._analysis_for(entry, self._physical_for(entry))
 
     def _steps_for(self, entry: _CacheEntry) -> Optional[list]:
         """The compiled stage plan for the local executor, pinned on the
@@ -343,12 +364,22 @@ class Session:
             recs[c] = a
         self.store.send_data(name, recs)
 
-    def _explain(self, ds: Dataset) -> str:
-        prog, rep, plan, steps = self._plan(ds)
-        if plan is None:
+    def _explain(self, ds: Dataset, diagnostics: bool = False) -> str:
+        # deliberately not via _plan(): explain never gates, so a plan the
+        # analyzer refuses can still be inspected (with its diagnostics)
+        prog = self._compile(ds)
+        analysis = rep = None
+        if self.do_optimize:
+            entry = self._entry_for(ds)
+            plan = self._physical_for(entry)
+            analysis = self._analysis_for(entry, plan)
+            rep = entry.report
+            prog = self._rebind_output(entry.optimized, ds.output_set)
+        else:
             plan = plan_physical(prog, self.store,
                                  self.executor.broadcast_threshold,
-                                 num_partitions=self.executor.P)
+                                 num_partitions=self.executor.P,
+                                 elide_exchanges=self.elide_exchanges)
         backend = (f"workers x{self.executor.P} "
                    f"via {self.executor.worker_kind}"
                    if self.backend == "workers"
@@ -373,6 +404,16 @@ class Session:
                     est = plan.estimates.get(op.in_list2, 0.0)
                     lines.append(f"    join: {algo} "
                                  f"(build side ~{est:,.0f} bytes)")
+                elif op.op == "AGG" and id(op) in plan.agg_elide:
+                    lines.append("    agg: exchange elided (input already "
+                                 "hash-partitioned on the key)")
+        if diagnostics:
+            if analysis is None:
+                from repro.analysis import analyze
+                analysis = analyze(prog, store=self.store, plan=plan,
+                                   config=self._build_config,
+                                   expr_backend=self.expr_backend)
+            lines.append(analysis.format())
         lines.extend(self._explain_last_run())
         return "\n".join(lines)
 

@@ -74,7 +74,9 @@ from repro.objectmodel.store import PagedStore
 
 __all__ = ["DistributedExecutor"]
 
-SOCKET_LAUNCHES = ("fork", "thread", "connect")
+# canonical home is the analyzer's capability rules; re-exported here for
+# the transport-facing callers that historically imported it from the driver
+from repro.analysis.capability import SOCKET_LAUNCHES, check_worker_config  # noqa: E402
 
 
 class DistributedExecutor:
@@ -90,49 +92,15 @@ class DistributedExecutor:
                  socket_launch: Optional[str] = None,
                  socket_addr: Optional[Tuple[str, int]] = None,
                  socket_accept_timeout: float = 60.0):
-        if num_workers < 1:
-            raise ValueError("num_workers must be >= 1")
-        from repro.core.exprc import EXPR_BACKENDS
-        if expr_backend not in EXPR_BACKENDS:
-            raise ValueError(f"unknown expr_backend {expr_backend!r} "
-                             f"(expected one of {EXPR_BACKENDS})")
-        if worker_kind not in ("thread", "fork", "socket"):
-            raise ValueError(f"unknown worker_kind {worker_kind!r} "
-                             "(expected 'thread', 'fork', or 'socket')")
-        if worker_kind == "fork" and expr_backend == "jax":
-            raise ValueError(
-                "worker_kind='fork' cannot run expr_backend='jax': XLA's "
-                "runtime threads do not survive a fork taken after jax "
-                "initialized in the parent (forked children would hang in "
-                "jit until the 30s SIGTERM) — use worker_kind='thread'")
+        # the constructor rules (exact messages, fixed order) are analyzer
+        # capability rules now — one home for the checks the Session, the
+        # raw-driver API, and `Dataset.check()` all agree on
+        check_worker_config(num_workers, expr_backend, worker_kind,
+                            socket_launch, socket_addr)
         if worker_kind != "socket":
-            if socket_launch is not None or socket_addr is not None:
-                raise ValueError(
-                    "socket_launch/socket_addr only apply to "
-                    "worker_kind='socket'")
             self.socket_launch = None
         else:
-            socket_launch = socket_launch or "fork"
-            if socket_launch not in SOCKET_LAUNCHES:
-                raise ValueError(
-                    f"unknown socket_launch {socket_launch!r} (expected "
-                    f"one of {SOCKET_LAUNCHES})")
-            if socket_launch == "fork" and expr_backend == "jax":
-                raise ValueError(
-                    "worker_kind='socket' with socket_launch='fork' cannot "
-                    "run expr_backend='jax': XLA's runtime threads do not "
-                    "survive the fork that spawns the connecting workers — "
-                    "use socket_launch='thread' (in-process workers over "
-                    "real TCP) or socket_launch='connect' (external worker "
-                    "processes with their own jax)")
-            if socket_launch == "connect" and (
-                    socket_addr is None or socket_addr[1] == 0):
-                raise ValueError(
-                    "socket_launch='connect' needs an explicit "
-                    "socket_addr=(host, port) with a nonzero port — "
-                    "external workers must be told where to dial before "
-                    "the query runs")
-            self.socket_launch = socket_launch
+            self.socket_launch = socket_launch or "fork"
         self.socket_addr = socket_addr
         self.socket_accept_timeout = socket_accept_timeout
         self.store = store

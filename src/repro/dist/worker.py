@@ -96,7 +96,9 @@ class WorkerRuntime:
                 data[op.out] = self._join(op, i, data[op.in_list],
                                           data[op.in_list2], algo)
             elif op.op == "AGG":
-                data[op.out] = self._aggregate(op, i, data[op.in_list])
+                data[op.out] = self._aggregate(
+                    op, i, data[op.in_list],
+                    elide=id(op) in plan.agg_elide)
             elif op.op == "TOPK":
                 data[op.out] = self._topk(op, i, data[op.in_list])
             elif op.op == "OUTPUT":
@@ -147,8 +149,8 @@ class WorkerRuntime:
                                     self.stats)
         return concat_batches([vl for src in inbox for vl in src])
 
-    def _aggregate(self, op: TCAPOp, i: int,
-                   batches: List[VectorList]) -> List[VectorList]:
+    def _aggregate(self, op: TCAPOp, i: int, batches: List[VectorList],
+                   elide: bool = False) -> List[VectorList]:
         spec = AggSpec.from_op(op)
         kcols, acols = spec.key_cols(op), spec.acc_cols(op)
         reducer = (device_segment_reducer(spec.combiners)
@@ -157,6 +159,16 @@ class WorkerRuntime:
         # local simulation — identical association order by construction)
         m = AggMap(spec)
         m.absorb_batches(batches, kcols, acols, reducer=reducer)
+        if elide:
+            # the planner proved this shard's rows are already stable_key_
+            # hash-partitioned on the key tuple: every key in `m` routes
+            # back to this rank, every peer's split toward us is empty —
+            # the exchange is the identity permutation. All ranks take this
+            # branch together (agg_elide ships with the wire plan), so no
+            # rank blocks in recv.
+            self.stats.exchanges_elided += 1
+            emitted = m.emit()
+            return [emitted] if emitted is not None else []
         split = m.split_by_key_hash(self.P)
         tag = f"{i}:partials"
         # packed multi-column partial maps ride the same page-block wire

@@ -1,0 +1,363 @@
+"""planlint — the compile-time dataflow analyzer.
+
+Deterministic coverage for every diagnostic code, the Session's execution
+gate, and the redundant-exchange elision (byte-identical results with
+strictly lower shuffle_bytes). The hypothesis companion
+(test_analysis_properties.py) fuzzes the schema-inference property this
+file pins on fixed chains; ``assert_inferred_schema_matches`` is shared
+so the property's assertion logic is exercised here even where hypothesis
+is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import BuildConfig, analyze
+from repro.analysis.capability import (session_config_violation,
+                                       worker_config_violation)
+from repro.core import Session, agg, make_lambda
+from repro.core.tcap import TCAPOp, TCAPProgram
+from repro.objectmodel.schema import Record, S, f64, i32, i64
+
+
+class ARow(Record):
+    k: S(2)
+    small: i32
+    big: i64
+    x: f64
+
+
+def _rows(n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    return ARow.pack(k=rng.choice([b"aa", b"bb", b"cc", b"dd"], n),
+                     small=rng.integers(-50, 50, n),
+                     big=rng.integers(-50, 50, n),
+                     x=rng.normal(0, 10, n))
+
+
+def assert_inferred_schema_matches(ds, result):
+    """The differential property both suites pin: the analyzer's inferred
+    output schema equals the executed columns' dtypes byte-for-byte."""
+    inferred = ds.check().output_schema
+    assert set(inferred) == set(result)
+    for col, arr in result.items():
+        assert inferred[col] is not None, col
+        assert inferred[col] == np.asarray(arr).dtype, col
+
+
+def _codes(report):
+    return {d.code for d in report.diagnostics}
+
+
+# --------------------------------------------------------------- schema
+def test_inferred_schema_matches_execution_all_backends():
+    recs = _rows()
+    for be in ("interp", "numpy", "jax"):
+        sess = Session(num_partitions=3, expr_backend=be)
+        ds = (sess.load("t", recs, ARow)
+                  .filter(lambda t: t.x > 0)
+                  .select(lambda t: t.big + t.x))
+        assert_inferred_schema_matches(ds, ds.collect())
+        grouped = (sess.load("t", recs, ARow)
+                       .group_by("k")
+                       .agg(n=agg.count(), s=agg.sum("x"),
+                            m=agg.mean("big")))
+        assert_inferred_schema_matches(grouped, grouped.collect())
+
+
+def test_pl101_int64_narrowing_warns_but_const_does_not():
+    sess = Session(num_partitions=2)
+    recs = _rows()
+    narrowing = sess.load("t", recs, ARow).select(lambda t: t.big + t.x)
+    rep = narrowing.check()
+    assert any(d.code == "PL101" and d.severity == "warning"
+               for d in rep.diagnostics)
+    # the scalar literal 1 is an int64 operand too — but a constant can
+    # never exceed 2^53, so it must not warn
+    const_only = sess.load("t", recs, ARow).select(lambda t: t.x * (1 - t.x))
+    assert "PL101" not in _codes(const_only.check())
+    narrowing.collect()  # warnings never gate
+
+
+def test_pl102_small_int_sum_saturation():
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows(), ARow)
+              .group_by("k").agg(s=agg.sum("small")))
+    rep = ds.check()
+    pl102 = [d for d in rep.diagnostics if d.code == "PL102"]
+    assert pl102 and pl102[0].severity == "warning"
+    assert rep.output_schema["s"] == np.dtype(np.int32)
+    # int64 accumulators don't warn
+    ok = (sess.load("t", _rows(), ARow)
+              .group_by("k").agg(s=agg.sum("big")))
+    assert "PL102" not in _codes(ok.check())
+
+
+def test_pl103_unresolved_column_gates_collect():
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows())  # untyped: no graph-build-time check
+              .select(lambda t: t.col("nope")))
+    rep = ds.check()
+    errs = rep.errors()
+    assert errs and errs[0].code == "PL103"
+    with pytest.raises(ValueError, match="unresolved column"):
+        ds.collect()
+    # explain never gates — the refused plan stays inspectable
+    assert "PL103" in ds.explain(diagnostics=True)
+
+
+def test_native_lambda_taint_suppresses_diagnostics():
+    """A column derived through a native lambda may have any dtype at
+    runtime — the analyzer must never gate or warn on it (even though the
+    zero-row probe sees an int64 feeding a float arith)."""
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows(), ARow)
+              .select(lambda t: make_lambda(t, lambda r: np.asarray(
+                  r["big"], np.int64), "asis") + t.x))
+    rep = ds.check()
+    assert not rep.errors()
+    assert not rep.warnings()
+    ds.collect()
+
+
+# --------------------------------------------------- partitioning / PL201
+def _chained(sess, recs):
+    return (sess.load("g", recs, ARow)
+                .group_by("k").agg(s=agg.sum("x"), n=agg.count())
+                .group_by("k").agg(t=agg.sum("s"), m=agg.mean("s")))
+
+
+def test_pl201_elision_byte_identical_and_lower_shuffle():
+    recs = _rows(400, seed=7)
+    on = Session(num_partitions=3)
+    off = Session(num_partitions=3, elide_exchanges=False)
+    q_on, q_off = _chained(on, recs), _chained(off, recs)
+
+    rep = q_on.check()
+    assert any(d.code == "PL201" and d.severity == "info"
+               for d in rep.diagnostics)
+    assert len(rep.elided_exchanges) == 1
+    # PL201 states the finding (the exchange IS redundant) either way;
+    # elided_exchanges states the action, empty when elision is disabled
+    assert "PL201" in _codes(q_off.check())
+    assert not q_off.check().elided_exchanges
+
+    r_on, r_off = q_on.collect(), q_off.collect()
+    for c in r_off:
+        assert r_on[c].tobytes() == r_off[c].tobytes(), c
+    assert on.last_stats.exchanges_elided == 1
+    assert off.last_stats.exchanges_elided == 0
+    # the second AGG's split bytes are gone entirely on the local backend
+    assert on.last_stats.shuffle_bytes < off.last_stats.shuffle_bytes
+    assert "exchange elided" in q_on.explain()
+    assert "exchange elided" not in q_off.explain()
+
+
+def test_first_aggregation_is_never_elided():
+    sess = Session(num_partitions=3)
+    ds = (sess.load("g", _rows(), ARow)
+              .group_by("k").agg(s=agg.sum("x")))
+    assert not ds.check().elided_exchanges
+
+
+def test_rekeyed_aggregation_is_not_elided():
+    """Grouping the aggregate's output by a *different* key must shuffle."""
+    sess = Session(num_partitions=3)
+    ds = (sess.load("g", _rows(), ARow)
+              .group_by("k").agg(s=agg.sum("small"), n=agg.count())
+              .group_by("n").agg(t=agg.sum("s")))
+    assert not ds.check().elided_exchanges
+    ds.collect()
+
+
+def test_join_kills_partitioning_fact():
+    """A hash-partition join re-routes rows by a different hash family —
+    a downstream same-key AGG must not be elided."""
+    sess = Session(num_partitions=3,
+                   broadcast_threshold_bytes=0)  # force hash_partition
+    recs = _rows(300, seed=3)
+    agged = (sess.load("g", recs, ARow)
+                 .group_by("k").agg(s=agg.sum("x")))
+    other = sess.load("o", recs, ARow)
+    joined = agged.join(other, on=lambda a, b: a.k == b.k,
+                        project=lambda a, b: a.s * b.x)
+    assert not joined.check().elided_exchanges
+
+
+def test_elision_parity_on_workers_backend():
+    recs = _rows(300, seed=11)
+    local = Session(num_partitions=3)
+    workers = Session(backend="workers", num_workers=3)
+    r_l = _chained(local, recs).collect()
+    r_w = _chained(workers, recs).collect()
+    for c in r_l:
+        assert r_l[c].tobytes() == r_w[c].tobytes(), c
+    assert all(ws.exchanges_elided == 1
+               for ws in workers.executor.worker_stats)
+
+
+# ------------------------------------------------------ capability rules
+def test_session_config_rules_match_historical_errors():
+    cases = [
+        (dict(expr_backend="apl"), "unknown expr_backend"),
+        (dict(backend="local", num_workers=2), "num_workers only applies"),
+        (dict(backend="local", worker_kind="thread"),
+         "worker_kind only applies"),
+        (dict(backend="local", socket_launch="fork"), "only apply to"),
+        (dict(backend="workers", num_partitions=2, num_workers=3),
+         "disagree"),
+        (dict(backend="workers", custom_executor=True),
+         "chooses its own executor"),
+        (dict(backend="workers", worker_kind="socket",
+              socket_launch="connect"), "explicit num_workers"),
+        (dict(backend="mainframe"), "unknown backend"),
+        (dict(plan_cache_size=0), "plan_cache_size"),
+    ]
+    for kw, fragment in cases:
+        msg = session_config_violation(BuildConfig(**kw))
+        assert msg and fragment in msg, (kw, msg)
+        with pytest.raises(ValueError, match=fragment):
+            Session(**{k: v for k, v in kw.items()
+                       if k != "custom_executor"},
+                    **({"executor_cls": object} if kw.get("custom_executor")
+                       else {}))
+    assert session_config_violation(BuildConfig()) is None
+
+
+def test_worker_config_rules_match_historical_errors():
+    from repro.dist.driver import DistributedExecutor
+    from repro.objectmodel.store import PagedStore
+    cases = [
+        (dict(num_workers=0), "num_workers must be >= 1"),
+        (dict(expr_backend="apl"), "unknown expr_backend"),
+        (dict(worker_kind="carrier-pigeon"), "unknown worker_kind"),
+        (dict(worker_kind="fork", expr_backend="jax"),
+         "worker_kind='thread'"),
+        (dict(worker_kind="thread", socket_launch="fork"), "only apply to"),
+        (dict(worker_kind="socket", socket_launch="dial"),
+         "unknown socket_launch"),
+        (dict(worker_kind="socket", expr_backend="jax"),
+         "socket_launch='thread'"),
+        (dict(worker_kind="socket", socket_launch="connect"),
+         "nonzero port"),
+    ]
+    base = dict(num_workers=2, expr_backend="numpy", worker_kind="thread",
+                socket_launch=None, socket_addr=None)
+    for kw, fragment in cases:
+        msg = worker_config_violation(**{**base, **kw})
+        assert msg and fragment in msg, (kw, msg)
+        with pytest.raises(ValueError, match=fragment):
+            DistributedExecutor(PagedStore(), **{**base, **kw})
+    assert worker_config_violation(**base) is None
+
+
+def test_pl301_native_lambda_refused_for_connect_workers():
+    """connect-mode workers receive the plan by pickle; a native lambda
+    cannot cross. The gate must fire at plan time — no rendezvous, no
+    socket, no timeout."""
+    sess = Session(backend="workers", worker_kind="socket",
+                   socket_launch="connect", num_workers=2,
+                   socket_addr=("127.0.0.1", 19999))
+    ds = (sess.load("t", _rows(), ARow)
+              .select(lambda t: make_lambda(t, lambda r: r["x"], "idn")))
+    rep = ds.check()
+    assert any(d.code == "PL301" and d.severity == "error"
+               for d in rep.diagnostics)
+    with pytest.raises(ValueError, match="native"):
+        ds.collect()
+    # the identical plan on in-process workers is fine
+    ok = Session(backend="workers", num_workers=2)
+    ds2 = (ok.load("t", _rows(), ARow)
+             .select(lambda t: make_lambda(t, lambda r: r["x"], "idn")))
+    assert "PL301" not in _codes(ds2.check())
+    ds2.collect()
+
+
+# -------------------------------------------------------- fusion / PL40x
+def test_pl401_native_lambda_is_fusion_barrier():
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows(), ARow)
+              .select(lambda t: make_lambda(t, lambda r: r["x"], "idn")))
+    pl401 = [d for d in ds.check().diagnostics if d.code == "PL401"]
+    assert pl401 and all(d.severity == "info" for d in pl401)
+    # the interp backend never fuses — no barrier to report
+    interp = Session(num_partitions=2, expr_backend="interp")
+    ds_i = (interp.load("t", _rows(), ARow)
+                  .select(lambda t: make_lambda(t, lambda r: r["x"], "idn")))
+    assert "PL401" not in _codes(ds_i.check())
+
+
+def _hash_after_arith_prog():
+    """The left-key pipeline of a join on a computed key, contiguous: the
+    HASH instruction (host-only key hashing) fuses directly after the
+    jitted arith core — the canonical host-device round-trip."""
+    return TCAPProgram([
+        TCAPOp(out="In", out_cols=("t",), op="SCAN",
+               info={"db": "db", "set": "t", "type": "ARow"}),
+        TCAPOp(out="W1", out_cols=("t", "a"), op="APPLY", in_list="In",
+               apply_cols=("t",), copy_cols=("t",), stage="a1",
+               info={"type": "attAccess", "attName": "big",
+                     "onType": "ARow"}),
+        TCAPOp(out="W2", out_cols=("t", "a", "b"), op="APPLY",
+               in_list="W1", apply_cols=("t",), copy_cols=("t", "a"),
+               stage="a2", info={"type": "attAccess", "attName": "small",
+                                 "onType": "ARow"}),
+        TCAPOp(out="W3", out_cols=("k",), op="APPLY", in_list="W2",
+               apply_cols=("a", "b"), copy_cols=(), stage="a3",
+               info={"type": "arith", "op": "+"}),
+        TCAPOp(out="H", out_cols=("k", "h"), op="HASH", in_list="W3",
+               apply_cols=("k",), copy_cols=("k",), stage="h0",
+               info={"type": "hash", "slot": "0"}),
+        TCAPOp(out="Out", out_cols=("k",), op="OUTPUT", in_list="H",
+               apply_cols=("k",), info={"type": "output", "db": "db",
+                                        "set": "out"}),
+    ])
+
+
+def test_pl402_host_device_roundtrip_on_jax():
+    prog = _hash_after_arith_prog()
+    rep = analyze(prog, expr_backend="jax")
+    pl402 = [d for d in rep.diagnostics if d.code == "PL402"]
+    assert pl402 and pl402[0].severity == "info"
+    assert "round-trip" in pl402[0].message
+    # numpy fuses the same run with no device boundary to cross
+    assert not any(d.code == "PL402"
+                   for d in analyze(prog, expr_backend="numpy").diagnostics)
+
+
+# ----------------------------------------------------- report plumbing
+def test_report_format_and_ordering():
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows())
+              .select(lambda t: t.col("nope") +
+                      make_lambda(t, lambda r: r["x"], "idn")))
+    rep = ds.check()
+    assert rep.errors() and rep.infos()  # PL103 + PL401
+    sevs = [d.severity for d in rep.diagnostics]
+    order = {"error": 0, "warning": 1, "info": 2}
+    assert sevs == sorted(sevs, key=order.__getitem__)
+    txt = rep.format()
+    assert "== diagnostics" in txt and "PL103" in txt
+    clean = Session(num_partitions=2).load("t", _rows(), ARow)
+    clean_rep = clean.select(lambda t: t.x).check()
+    assert "(clean)" in clean_rep.format()
+
+
+def test_check_is_cached_with_the_plan():
+    sess = Session(num_partitions=2)
+    ds = sess.load("t", _rows(), ARow).select(lambda t: t.x)
+    rep1 = ds.check()
+    ds.collect()
+    # same plan-cache entry, same report object — no re-analysis
+    assert ds.check() is rep1
+
+
+def test_do_optimize_false_still_checks_but_never_gates():
+    sess = Session(num_partitions=2, do_optimize=False)
+    ds = (sess.load("t", _rows())
+              .select(lambda t: t.col("nope")))
+    rep = ds.check()
+    assert any(d.code == "PL103" for d in rep.errors())
+    # without the optimizing planner there is no gate; the runtime error
+    # surfaces as before
+    with pytest.raises(Exception):
+        ds.collect()

@@ -1,0 +1,101 @@
+"""Hypothesis property suite for planlint's schema inference: over random
+term trees and random grouped aggregations, the analyzer's forward-inferred
+output schema equals the executed columns' dtypes byte-for-byte — on every
+expression backend. The deterministic assertion helper is shared with
+``test_analysis.py``; the AST machinery with ``exprc_trees.py``."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; CI installs it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from exprc_trees import build_term  # noqa: E402
+from test_analysis import assert_inferred_schema_matches  # noqa: E402
+from test_exprc import BACKENDS, TRow, _rows  # noqa: E402
+from repro.core import Session, agg  # noqa: E402
+
+_COLS = st.sampled_from([("col", "a"), ("col", "b"), ("col", "c")])
+_CONSTS = st.one_of(
+    st.integers(-20, 20),
+    st.floats(-20, 20, allow_nan=False).map(lambda x: round(x, 3)))
+_NUM = st.recursive(
+    _COLS,
+    lambda kids: st.tuples(st.sampled_from(["+", "-", "*"]), kids,
+                           st.one_of(kids, _CONSTS)),
+    max_leaves=5)
+_PRED = st.recursive(
+    st.tuples(st.sampled_from(["<", ">", "<=", ">=", "==", "!="]), _NUM,
+              st.one_of(_NUM, _CONSTS)),
+    lambda kids: st.one_of(
+        st.tuples(st.just("&"), kids, kids),
+        st.tuples(st.just("|"), kids, kids),
+        st.tuples(st.just("~"), kids)),
+    max_leaves=4)
+_AGGS = st.dictionaries(
+    st.sampled_from(["o1", "o2", "o3"]),
+    st.one_of(
+        st.sampled_from(["a", "b", "c"]).map(agg.sum),
+        st.sampled_from(["a", "b", "c"]).map(agg.min),
+        st.sampled_from(["a", "b", "c"]).map(agg.max),
+        st.sampled_from(["a", "b", "c"]).map(agg.mean),
+        st.just(agg.count())),
+    min_size=1, max_size=3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(_PRED, min_size=0, max_size=2), _NUM,
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 200),
+       st.integers(1, 4))
+def test_inferred_schema_matches_execution_over_term_trees(
+        preds, proj, seed, n, parts):
+    recs = _rows(n, seed)
+    for be in BACKENDS:
+        sess = Session(num_partitions=parts, expr_backend=be)
+        ds = sess.load("t", recs, TRow)
+        for p in preds:
+            ds = ds.filter(lambda t, _p=p: build_term(_p, t))
+        ds = ds.select(lambda t: build_term(proj, t))
+        with np.errstate(all="ignore"):
+            assert_inferred_schema_matches(ds, ds.collect())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["a", "tag"]), _AGGS,
+       st.integers(0, 2 ** 31 - 1), st.integers(1, 200),
+       st.integers(1, 4))
+def test_inferred_schema_matches_execution_over_aggregations(
+        key, outputs, seed, n, parts):
+    recs = _rows(n, seed)
+    for be in BACKENDS:
+        sess = Session(num_partitions=parts, expr_backend=be)
+        ds = sess.load("t", recs, TRow).group_by(key).agg(**outputs)
+        with np.errstate(all="ignore"):
+            assert_inferred_schema_matches(ds, ds.collect())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["a", "tag"]),
+       st.sampled_from(["a", "b", "c"]),
+       st.integers(0, 2 ** 31 - 1), st.integers(1, 200),
+       st.integers(1, 4))
+def test_chained_aggregation_elision_is_byte_identical(
+        key, val, seed, n, parts):
+    """Re-grouping an aggregate by its own key: the elided plan (no second
+    exchange) and the full-shuffle plan agree byte-for-byte, and the
+    analyzer flags exactly one redundant exchange."""
+    recs = _rows(n, seed)
+    results = []
+    for elide in (True, False):
+        sess = Session(num_partitions=parts, elide_exchanges=elide)
+        ds = (sess.load("t", recs, TRow)
+                  .group_by(key).agg(s=agg.sum(val), n=agg.count())
+                  .group_by(key).agg(t=agg.sum("s"), m=agg.mean("s")))
+        rep = ds.check()
+        assert len(rep.elided_exchanges) == (1 if elide else 0)
+        with np.errstate(all="ignore"):
+            results.append(ds.collect())
+    r_on, r_off = results
+    assert set(r_on) == set(r_off)
+    for c in r_off:
+        assert r_on[c].tobytes() == r_off[c].tobytes(), c

@@ -360,3 +360,50 @@ def test_session_backend_validation():
     with pytest.raises(ValueError, match="nonzero port"):
         Session(backend="workers", worker_kind="socket", num_workers=2,
                 socket_launch="connect")
+
+
+# --------------------------------------------- redundant-exchange elision
+def _regrouped(e):
+    """Re-group an aggregate by its own key: the second AGG's exchange is
+    provably redundant (rows are already hash-routed by that key) and the
+    planner elides it."""
+    return (e.group_by("dept")
+             .agg(total=agg.sum("salary"), n=agg.count())
+             .group_by("dept")
+             .agg(t=agg.sum("total"), m=agg.mean("total")))
+
+
+def test_elision_chain_local_shuffle_drop_and_byte_identity():
+    emps, _ = _emps()
+    on = Session(num_partitions=3)
+    off = Session(num_partitions=3, elide_exchanges=False)
+    q_on = _regrouped(on.load("emps", emps, type_name="Emp"))
+    q_off = _regrouped(off.load("emps", emps, type_name="Emp"))
+    _assert_bytes_equal(q_on.collect(), q_off.collect())
+    assert on.last_stats.exchanges_elided == 1
+    assert off.last_stats.exchanges_elided == 0
+    # the elided plan skips the second AGG's split entirely on the local
+    # backend (which counts every partition-to-partition block)
+    assert on.last_stats.shuffle_bytes < off.last_stats.shuffle_bytes
+    assert "exchange elided" in q_on.explain()
+    assert "exchange elided" not in q_off.explain()
+
+
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
+def test_elision_chain_workers_equivalence(worker_kind):
+    """The elided aggregation on the distributed runtime: byte-identical
+    to the local simulation and to the unelided plan, every transport, all
+    ranks skipping the exchange in lockstep."""
+    kw = transport_kw(worker_kind)
+    (ls, le, _), (ws, we, _) = _sessions(**kw)
+    local, workers = _regrouped(le).collect(), _regrouped(we).collect()
+    _assert_bytes_equal(local, workers)
+    assert all(st.exchanges_elided == 1
+               for st in ws.executor.worker_stats)
+    off = Session(backend="workers", num_workers=3,
+                  elide_exchanges=False, **kw)
+    emps, _ = _emps()
+    unelided = _regrouped(off.load("emps", emps, type_name="Emp")).collect()
+    _assert_bytes_equal(workers, unelided)
+    assert all(st.exchanges_elided == 0
+               for st in off.executor.worker_stats)

@@ -50,12 +50,31 @@ def _query(sess: Session, emps: np.ndarray, deps: np.ndarray):
              .aggregate(key=None, value=None))
 
 
-def _time_per_call(fn, reps: int) -> float:
+def _samples(fn, reps: int):
     fn()  # warmup (plan cache, lazy imports)
-    t0 = time.perf_counter()
+    out = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / reps
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    mid = len(s) // 2
+    return s[mid] if len(s) % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def _p90(xs) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(0.9 * (len(s) - 1))))]
+
+
+def _derived(samples, n: int) -> str:
+    med = _median(samples)
+    return (f"median_us={med * 1e6:.1f} p90_us={_p90(samples) * 1e6:.1f} "
+            f"rows_per_s={n / med:.0f}")
 
 
 def run(n: int = 100_000, reps: int = 5, worker_counts=(1, 2, 4)):
@@ -65,30 +84,60 @@ def run(n: int = 100_000, reps: int = 5, worker_counts=(1, 2, 4)):
     # backend pays the full two-sided shuffle being measured.
     sess = Session(num_partitions=4, broadcast_threshold_bytes=0)
     ds = _query(sess, emps, deps)
-    t_local = _time_per_call(ds.collect, reps)
+    local = _samples(ds.collect, reps)
+    t_local = _median(local)
     rows.append((f"dist_local_sim_p4_n{n}", t_local * 1e6,
-                 f"est_shuffle_bytes={sess.executor.stats.shuffle_bytes}"))
+                 f"est_shuffle_bytes={sess.executor.stats.shuffle_bytes} "
+                 + _derived(local, n)))
     for N in worker_counts:
         sess = Session(backend="workers", num_workers=N,
                        broadcast_threshold_bytes=0)
         ds = _query(sess, emps, deps)
-        t = _time_per_call(ds.collect, reps)
+        s = _samples(ds.collect, reps)
         st = sess.executor.stats
-        rows.append((f"dist_workers_x{N}_n{n}", t * 1e6,
+        rows.append((f"dist_workers_x{N}_n{n}", _median(s) * 1e6,
                      f"real_shuffle_bytes={st.shuffle_bytes} "
-                     f"vs_local={t / t_local:.2f}x"))
+                     f"vs_local={_median(s) / t_local:.2f}x "
+                     + _derived(s, n)))
     socket_ok = (sys.platform != "win32"
                  and "fork" in multiprocessing.get_all_start_methods())
     for N in (worker_counts if socket_ok else ()):
         sess = Session(backend="workers", num_workers=N,
                        worker_kind="socket", broadcast_threshold_bytes=0)
         ds = _query(sess, emps, deps)
-        t = _time_per_call(ds.collect, reps)
+        s = _samples(ds.collect, reps)
         st = sess.executor.stats
-        rows.append((f"dist_socket_x{N}_n{n}", t * 1e6,
+        rows.append((f"dist_socket_x{N}_n{n}", _median(s) * 1e6,
                      f"real_shuffle_bytes={st.shuffle_bytes} "
-                     f"vs_local={t / t_local:.2f}x"))
+                     f"vs_local={_median(s) / t_local:.2f}x "
+                     + _derived(s, n)))
     return rows
+
+
+def trace_overhead(n: int = 60_000, reps: int = 15, N: int = 2):
+    """Wall-clock cost of tracing: off vs on, interleaved to factor out
+    machine drift, compared on the *minimum* sample (the lowest-noise
+    estimator of the true floor — scheduler hiccups only ever add time).
+    Returns ``(min_off_s, min_on_s, overhead_frac)`` — the number the CI
+    budget asserts against (<3%)."""
+    emps, deps = _data(n)
+    off = Session(backend="workers", num_workers=N,
+                  broadcast_threshold_bytes=0)
+    on = Session(backend="workers", num_workers=N, trace=True,
+                 broadcast_threshold_bytes=0)
+    ds_off = _query(off, emps, deps)
+    ds_on = _query(on, emps, deps)
+    ds_off.collect(), ds_on.collect()  # warmup both plans
+    s_off, s_on = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        ds_off.collect()
+        s_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ds_on.collect()
+        s_on.append(time.perf_counter() - t0)
+    m_off, m_on = min(s_off), min(s_on)
+    return m_off, m_on, (m_on - m_off) / m_off
 
 
 if __name__ == "__main__":

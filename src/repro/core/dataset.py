@@ -417,13 +417,21 @@ class Dataset:
                 f"{sorted(result)}; use collect()")
         return next(iter(result.values()))
 
-    def explain(self, diagnostics: bool = False) -> str:
+    def explain(self, diagnostics: bool = False,
+                analyze: bool = False) -> str:
         """Render the optimized TCAP program + physical plan (no
         execution). With ``diagnostics=True``, the planlint report —
         structured findings plus the inferred output schema — is appended.
-        Unlike ``collect()``, explain never refuses a plan: a query the
-        analyzer gates on can still be inspected here."""
-        return self._session._explain(self, diagnostics=diagnostics)
+        With ``analyze=True`` the query is *executed* under a forced span
+        recorder and a per-op table (wall ms / rows / bytes / % of query
+        wall) is rendered next to the static plan; the merged trace stays
+        available as ``session.last_trace`` (Perfetto export via
+        ``last_trace.to_chrome_trace(path)``). Unlike ``collect()``, plain
+        explain never refuses a plan: a query the analyzer gates on can
+        still be inspected here (``analyze=True`` runs the plan, so it
+        gates exactly as ``collect()`` does)."""
+        return self._session._explain(self, diagnostics=diagnostics,
+                                      analyze=analyze)
 
     def check(self):
         """Run the compile-time analyzer (planlint) over this query under

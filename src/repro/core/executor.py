@@ -41,6 +41,7 @@ from repro.core.relops import (AggMap, AggSpec, assemble_output,
                                greedy_page_placement, merge_topk,
                                probe_join, split_by_hash)
 from repro.core.tcap import TCAPOp, TCAPProgram
+from repro.obs.trace import NULL, current, op_name, using
 from repro.objectmodel.store import PagedStore
 from repro.objectmodel.vectorlist import VectorList
 
@@ -58,6 +59,12 @@ class ExecStats:
     hash_partition_joins: int = 0
     exchanges_elided: int = 0
     optimizer: Optional[OptimizerReport] = None
+
+
+def _part_rows(parts) -> int:
+    """Total rows across a partitioned batch list (trace attribute only —
+    called solely when a recorder is enabled)."""
+    return sum(vl.num_rows or 0 for batches in parts for vl in batches)
 
 
 class Executor:
@@ -94,11 +101,13 @@ class Executor:
 
     def execute_program(self, prog: TCAPProgram,
                         plan: Optional[PhysicalPlan] = None,
-                        steps: Optional[list] = None
-                        ) -> Dict[str, np.ndarray]:
+                        steps: Optional[list] = None,
+                        trace=None) -> Dict[str, np.ndarray]:
         """Run a TCAP program. ``plan`` / ``steps`` let the Session front-end
         pass its cached physical plan and compiled stage plan; standalone
-        callers leave them None and both are derived here."""
+        callers leave them None and both are derived here. ``trace`` is a
+        :class:`~repro.obs.trace.SpanRecorder` to record per-op spans into
+        (None — the default — records nothing)."""
         self.stats = ExecStats()
         if self.do_optimize:
             prog, rep = optimize(prog)
@@ -109,39 +118,59 @@ class Executor:
                                  num_partitions=self.P)
         if steps is None:
             steps = build_steps(prog, self.expr_backend)
-        return self._run(steps, plan)
+        return self._run(steps, plan, NULL if trace is None else trace)
 
     # --------------------------------------------------------- internals
-    def _run(self, steps: list, plan: PhysicalPlan
+    def _run(self, steps: list, plan: PhysicalPlan, rec=NULL
              ) -> Dict[str, np.ndarray]:
         # data[list_name][partition] -> list of VectorList batches
         data: Dict[str, List[List[VectorList]]] = {}
         result: Dict[str, np.ndarray] = {}
 
-        for step in steps:
-            if isinstance(step, FusedStage):
-                data[step.out] = self._map_batches(data[step.in_list], step)
-                continue
-            op = step
-            if op.op == "SCAN":
-                data[op.out] = self._scan(op)
-            elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
-                data[op.out] = self._map_batches(data[op.in_list],
-                                                 batch_kernel(op))
-            elif op.op == "JOIN":
-                data[op.out] = self._join(op, data[op.in_list],
-                                          data[op.in_list2],
-                                          plan.join_algo.get(id(op), "hash_partition"))
-            elif op.op == "AGG":
-                data[op.out] = self._aggregate(
-                    op, data[op.in_list],
-                    elide=id(op) in plan.agg_elide)
-            elif op.op == "TOPK":
-                data[op.out] = self._topk(op, data[op.in_list])
-            elif op.op == "OUTPUT":
-                result = self._output(op, data[op.in_list])
-            else:
-                raise ValueError(f"unknown op {op.op}")
+        # the op index within the program: exchange tags key on it, and the
+        # per-op span names must match the worker runtime's exactly (fused
+        # steps advance it by their op count)
+        i = -1
+        with using(rec):
+            for step in steps:
+                if isinstance(step, FusedStage):
+                    first, i = i + 1, i + len(step.ops)
+                    name = op_name(first, i, [o.op for o in step.ops])
+                    with rec.span(name, cat="op", idx=first) as sp:
+                        data[step.out] = self._map_batches(
+                            data[step.in_list], step)
+                    if rec.enabled:
+                        sp.set(rows=_part_rows(data[step.out]))
+                    continue
+                op = step
+                i += 1
+                sb0 = self.stats.shuffle_bytes
+                with rec.span(op_name(i, i, [op.op]), cat="op",
+                              idx=i, op=op.op) as sp:
+                    if op.op == "SCAN":
+                        data[op.out] = self._scan(op)
+                    elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
+                        data[op.out] = self._map_batches(data[op.in_list],
+                                                         batch_kernel(op))
+                    elif op.op == "JOIN":
+                        data[op.out] = self._join(
+                            op, i, data[op.in_list], data[op.in_list2],
+                            plan.join_algo.get(id(op), "hash_partition"))
+                    elif op.op == "AGG":
+                        data[op.out] = self._aggregate(
+                            op, i, data[op.in_list],
+                            elide=id(op) in plan.agg_elide)
+                    elif op.op == "TOPK":
+                        data[op.out] = self._topk(op, data[op.in_list])
+                    elif op.op == "OUTPUT":
+                        result = self._output(op, data[op.in_list])
+                    else:
+                        raise ValueError(f"unknown op {op.op}")
+                if rec.enabled:
+                    sp.set(rows=(self.stats.rows_output
+                                 if op.op == "OUTPUT"
+                                 else _part_rows(data[op.out])),
+                           bytes=self.stats.shuffle_bytes - sb0)
         return result
 
     def _scan(self, op: TCAPOp) -> List[List[VectorList]]:
@@ -165,18 +194,23 @@ class Executor:
         return [[fn(vl) for vl in batches] for batches in parts]
 
     # ------------------------------------------------------------- join
-    def _join(self, op: TCAPOp, left, right, algo: str
+    def _join(self, op: TCAPOp, i: int, left, right, algo: str
               ) -> List[List[VectorList]]:
         if algo == "broadcast":
             self.stats.broadcast_joins += 1
-            build_all = concat_batches([vl for bl in right for vl in bl])
-            self.stats.shuffle_bytes += bytes_of(build_all) * max(0, self.P - 1)
+            sb0 = self.stats.shuffle_bytes
+            with current().span(f"x:bcast:{i}:build", cat="exchange",
+                                tag=f"{i}:build") as sp:
+                build_all = concat_batches([vl for bl in right for vl in bl])
+                self.stats.shuffle_bytes += (bytes_of(build_all)
+                                             * max(0, self.P - 1))
+            sp.set(bytes=self.stats.shuffle_bytes - sb0)
             rparts = [build_all] * self.P
             lparts = [concat_batches(p) for p in left]
         else:
             self.stats.hash_partition_joins += 1
-            lparts = self._shuffle(left, op.apply_cols[0])
-            rparts = self._shuffle(right, op.apply_cols2[0])
+            lparts = self._shuffle(left, op.apply_cols[0], f"{i}:L")
+            rparts = self._shuffle(right, op.apply_cols2[0], f"{i}:R")
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p in range(self.P):
             probed = probe_join(op, lparts[p], rparts[p])
@@ -187,21 +221,27 @@ class Executor:
             out[p].append(res)
         return out
 
-    def _shuffle(self, parts, hash_name: str) -> List[VectorList]:
+    def _shuffle(self, parts, hash_name: str, tag: str) -> List[VectorList]:
         """Repartition batches by hash % P (the network shuffle)."""
-        buckets: List[List[VectorList]] = [[] for _ in range(self.P)]
-        for pi, batches in enumerate(parts):
-            for vl in batches:
-                for p, sub in enumerate(split_by_hash(vl, hash_name, self.P)):
-                    if sub is None:
-                        continue
-                    if p != pi:
-                        self.stats.shuffle_bytes += bytes_of(sub)
-                    buckets[p].append(sub)
-        return [concat_batches(b) for b in buckets]
+        sb0 = self.stats.shuffle_bytes
+        with current().span(f"x:shuffle:{tag}", cat="exchange",
+                            tag=tag) as sp:
+            buckets: List[List[VectorList]] = [[] for _ in range(self.P)]
+            for pi, batches in enumerate(parts):
+                for vl in batches:
+                    for p, sub in enumerate(
+                            split_by_hash(vl, hash_name, self.P)):
+                        if sub is None:
+                            continue
+                        if p != pi:
+                            self.stats.shuffle_bytes += bytes_of(sub)
+                        buckets[p].append(sub)
+            out = [concat_batches(b) for b in buckets]
+        sp.set(bytes=self.stats.shuffle_bytes - sb0)
+        return out
 
     # -------------------------------------------------------------- agg
-    def _aggregate(self, op: TCAPOp, parts,
+    def _aggregate(self, op: TCAPOp, i: int, parts,
                    elide: bool = False) -> List[List[VectorList]]:
         spec = AggSpec.from_op(op)
         kcols, acols = spec.key_cols(op), spec.acc_cols(op)
@@ -227,13 +267,17 @@ class Executor:
             self.stats.exchanges_elided += 1
             finals = partials
         else:
-            finals = [AggMap(spec) for _ in range(self.P)]
-            for m in partials:
-                split = m.split_by_key_hash(self.P)
-                for p in range(self.P):
-                    if split[p].data:
-                        self.stats.shuffle_bytes += split[p].nbytes()
-                        finals[p].merge(split[p])
+            sb0 = self.stats.shuffle_bytes
+            with current().span(f"x:shuffle:{i}:partials", cat="exchange",
+                                tag=f"{i}:partials") as sp:
+                finals = [AggMap(spec) for _ in range(self.P)]
+                for m in partials:
+                    split = m.split_by_key_hash(self.P)
+                    for p in range(self.P):
+                        if split[p].data:
+                            self.stats.shuffle_bytes += split[p].nbytes()
+                            finals[p].merge(split[p])
+            sp.set(bytes=self.stats.shuffle_bytes - sb0)
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p, m in enumerate(finals):
             emitted = m.emit()

@@ -43,6 +43,8 @@ import numpy as np
 from repro.core.lambdas import METHOD_REGISTRY, _APPLY_BINOP as _NP_BINOP
 from repro.core.relops import hash_col, reset_segment_kernels
 from repro.core.tcap import TCAPOp, TCAPProgram
+from repro.obs.metrics import METRICS
+from repro.obs.trace import current
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["FusedStage", "build_steps", "kernel_cache_info",
@@ -287,6 +289,10 @@ class FusedStage:
         return out
 
     def _specialize(self, dsig: Tuple, arrays: Tuple) -> Callable:
+        # runs once per (stage, dtype signature) — the per-batch hot path
+        # memoizes in self._kern — so the metrics/tracing work here is off
+        # the per-row/per-batch cost model. METRICS calls sit outside
+        # _KLOCK (the registry has its own lock).
         key = None if self.sig is None else (self.backend, self.sig, dsig)
         if key is not None:
             with _KLOCK:
@@ -294,18 +300,29 @@ class FusedStage:
                 if kern is not None:
                     _KSTATS["hits"] += 1
                     _KCACHE.move_to_end(key)
-                    return kern
-                _KSTATS["misses"] += 1
-        if self.backend == "jax":
-            kern = _compile_jax(self.ir, arrays)
-        else:
-            kern = _compile_numpy(self.ir)
+                else:
+                    _KSTATS["misses"] += 1
+            if kern is not None:
+                METRICS.inc("kernel_cache.hits")
+                return kern
+            METRICS.inc("kernel_cache.misses")
+        with current().span("kernel:compile", cat="kernel",
+                            backend=self.backend,
+                            stage="+".join(op.op for op in self.ops)):
+            if self.backend == "jax":
+                kern = _compile_jax(self.ir, arrays)
+            else:
+                kern = _compile_numpy(self.ir)
         if key is not None:
+            evicted = 0
             with _KLOCK:
                 _KCACHE[key] = kern
                 while len(_KCACHE) > _CACHE_CAP:
                     _KCACHE.popitem(last=False)
                     _KSTATS["evictions"] += 1
+                    evicted += 1
+            if evicted:
+                METRICS.inc("kernel_cache.evictions", evicted)
         return kern
 
 

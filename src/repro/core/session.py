@@ -41,6 +41,8 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
@@ -54,6 +56,9 @@ from repro.core.naming import NameScope
 from repro.core.optimizer import OptimizerReport, optimize
 from repro.core.physical import PhysicalPlan, plan_physical
 from repro.core.tcap import TCAPProgram, structural_signature
+from repro.obs.metrics import METRICS
+from repro.obs.render import last_run_lines, render_analyze
+from repro.obs.trace import NULL, QueryTrace, SpanRecorder, using
 from repro.objectmodel.schema import Record
 from repro.objectmodel.store import PagedStore
 
@@ -96,7 +101,8 @@ class Session:
                  socket_addr: Optional[Tuple[str, int]] = None,
                  plan_cache_size: int = 64,
                  expr_backend: str = "numpy",
-                 elide_exchanges: bool = True):
+                 elide_exchanges: bool = True,
+                 trace: bool = False):
         self.store = store if store is not None else PagedStore()
         self.db = db
         self.scope = NameScope()
@@ -104,6 +110,12 @@ class Session:
         self.backend = backend
         self.expr_backend = expr_backend
         self.elide_exchanges = elide_exchanges
+        # query tracing: per-query span recording through plan, executor,
+        # kernels, and (workers backend) every rank — `Session(trace=True)`
+        # or REPRO_TRACE=1. Off by default: every instrumentation site then
+        # sees the shared no-op recorder (repro.obs.trace.NULL).
+        self.trace = bool(trace) or os.environ.get("REPRO_TRACE") == "1"
+        self.last_trace: Optional[QueryTrace] = None
         # build-time configuration validation is an analyzer capability
         # rule set (repro.analysis.capability) — one fixed rule order, the
         # historical exception messages preserved verbatim. Imported here,
@@ -223,39 +235,51 @@ class Session:
             ds._sig = structural_signature(ds._prog, strict=True)
         return ds._prog
 
-    def _plan(self, ds: Dataset):
+    def _plan(self, ds: Dataset, rec=NULL):
         """Compile + optimize (plan-cached) + physically plan (cached per
         store stats_version) + analyze (the planlint gate: a plan with
         error-severity diagnostics is refused before execution) +
         stage-compile (kernels pinned on the cache entry). Returns
         ``(prog, report, physical_plan, steps)`` — the latter two are None
         when optimization is off (the executor then derives both itself,
-        and the gate is skipped with it)."""
-        prog = self._compile(ds)
-        if not self.do_optimize:
-            return prog, None, None, None
-        entry = self._entry_for(ds)
-        plan = self._physical_for(entry)
-        errors = self._analysis_for(entry, plan).errors()
-        if errors:
-            raise ValueError(errors[0].message)
-        return (self._rebind_output(entry.optimized, ds.output_set),
-                entry.report, plan, self._steps_for(entry))
+        and the gate is skipped with it). ``rec`` records one span per
+        phase (cached phases show up as near-zero spans — the plan cache
+        paying off is itself visible in the trace)."""
+        with rec.span("plan", cat="phase"):
+            with rec.span("plan:compile", cat="plan"):
+                prog = self._compile(ds)
+            if not self.do_optimize:
+                return prog, None, None, None
+            with rec.span("plan:optimize", cat="plan"):
+                entry = self._entry_for(ds)
+            with rec.span("plan:physical", cat="plan"):
+                plan = self._physical_for(entry)
+            with rec.span("plan:analyze", cat="plan"):
+                errors = self._analysis_for(entry, plan).errors()
+            if errors:
+                raise ValueError(errors[0].message)
+            with rec.span("plan:stages", cat="plan"):
+                steps = self._steps_for(entry)
+            return (self._rebind_output(entry.optimized, ds.output_set),
+                    entry.report, plan, steps)
 
     def _entry_for(self, ds: Dataset) -> _CacheEntry:
         key = ds._sig
         entry = self._plan_cache.get(key)
         if entry is not None:
             self.cache_hits += 1
+            METRICS.inc("plan_cache.hits")
             self._plan_cache.move_to_end(key)  # LRU touch
         else:
             opt, rep = optimize(ds._prog)
             self.cache_misses += 1
+            METRICS.inc("plan_cache.misses")
             entry = _CacheEntry(ds._prog, opt, rep)
             self._plan_cache[key] = entry
             while len(self._plan_cache) > self.plan_cache_size:
                 self._plan_cache.popitem(last=False)
                 self.cache_evictions += 1
+                METRICS.inc("plan_cache.evictions")
         return entry
 
     def _physical_for(self, entry: _CacheEntry) -> PhysicalPlan:
@@ -334,14 +358,45 @@ class Session:
                 f"write({write_name!r}): set already exists in the store — "
                 "pick a fresh name (Session.fresh_set_name) to avoid "
                 "silently reading stale or merged data")
-        prog, rep, plan, steps = self._plan(ds)
-        result = self.executor.execute_program(prog, plan=plan, steps=steps)
-        self.last_stats = self.executor.stats
-        self.last_report = rep
+        rec = SpanRecorder() if self.trace else NULL
+        result, rep = self._traced_execute(ds, rec)
         if write_name is not None and not ds._materialized:
             self._materialize(write_name, result)
             ds._materialized = True
         return result
+
+    def _traced_execute(self, ds: Dataset, rec):
+        """Plan + execute one query under ``rec`` (root span "query"),
+        updating ``last_stats`` / ``last_report`` / ``last_trace`` and the
+        process-wide metrics. Shared by ``collect()`` and
+        ``explain(analyze=True)``."""
+        t0 = time.monotonic_ns()
+        with using(rec):
+            with rec.span("query", cat="query", backend=self.backend,
+                          expr_backend=self.expr_backend):
+                prog, rep, plan, steps = self._plan(ds, rec)
+                with rec.span("execute", cat="phase"):
+                    result = self.executor.execute_program(
+                        prog, plan=plan, steps=steps,
+                        trace=rec if rec.enabled else None)
+        wall_ms = (time.monotonic_ns() - t0) / 1e6
+        self.last_stats = st = self.executor.stats
+        self.last_report = rep
+        if rec.enabled:
+            self.last_trace = QueryTrace.merge(
+                rec, getattr(self.executor, "worker_spans", None),
+                backend=self.backend,
+                transport=getattr(self.executor, "worker_kind", None),
+                P=self.executor.P, expr_backend=self.expr_backend,
+                wall_ms=wall_ms)
+        METRICS.inc("queries.total")
+        METRICS.inc("query.wall_ms.total", wall_ms)
+        METRICS.gauge("query.wall_ms.last", wall_ms)
+        METRICS.inc("rows.scanned.total", int(st.rows_scanned))
+        METRICS.inc("rows.output.total", int(st.rows_output))
+        METRICS.inc("shuffle.bytes.total", int(st.shuffle_bytes))
+        METRICS.inc("exchanges.elided.total", int(st.exchanges_elided))
+        return result, rep
 
     def _materialize(self, name: str, result: Dict[str, np.ndarray]) -> None:
         """Persist a collect() result as a structured-record set — the only
@@ -364,9 +419,17 @@ class Session:
             recs[c] = a
         self.store.send_data(name, recs)
 
-    def _explain(self, ds: Dataset, diagnostics: bool = False) -> str:
+    def _explain(self, ds: Dataset, diagnostics: bool = False,
+                 analyze: bool = False) -> str:
         # deliberately not via _plan(): explain never gates, so a plan the
-        # analyzer refuses can still be inspected (with its diagnostics)
+        # analyzer refuses can still be inspected (with its diagnostics).
+        # analyze=True *executes* the query under a forced recorder first
+        # (and does go through _plan's gate, since it runs the plan), so
+        # the static plan below is rendered next to measured per-op time.
+        analyzed = None
+        if analyze:
+            self._traced_execute(ds, SpanRecorder())
+            analyzed = render_analyze(self.last_trace)
         prog = self._compile(ds)
         analysis = rep = None
         if self.do_optimize:
@@ -414,28 +477,20 @@ class Session:
                                    config=self._build_config,
                                    expr_backend=self.expr_backend)
             lines.append(analysis.format())
+        if analyzed is not None:
+            lines.append(analyzed)
         lines.extend(self._explain_last_run())
         return "\n".join(lines)
 
     def _explain_last_run(self) -> list:
         """Execution stats from the session's most recent query, if any —
         for backend='workers' the shuffle_bytes are real serialized page
-        traffic, reported per worker."""
-        st = self.last_stats
-        if st is None:
-            return []
-        lines = [f"== last run: rows_scanned={st.rows_scanned}, "
-                 f"rows_output={st.rows_output}, "
-                 f"shuffle_bytes={st.shuffle_bytes} =="]
-        worker_stats = getattr(self.executor, "worker_stats", None)
-        if worker_stats:
-            per = ", ".join(f"w{i}={ws.shuffle_bytes}"
-                            for i, ws in enumerate(worker_stats))
-            kind = getattr(self.executor, "worker_kind", None)
-            label = ("page-serialized" if kind is None
-                     else f"page-serialized, transport={kind}")
-            lines.append(f"  per-worker shuffle_bytes ({label}): {per}")
-        return lines
+        traffic, reported per worker with the transport named (rendering
+        single-sourced in :mod:`repro.obs.render`)."""
+        return last_run_lines(
+            self.last_stats,
+            getattr(self.executor, "worker_stats", None),
+            getattr(self.executor, "worker_kind", None))
 
     # ------------------------------------------------------------ stats
     def plan_cache_info(self) -> Dict[str, int]:

@@ -67,9 +67,10 @@ from repro.dist.exchange import (ProcessTransport, SocketTransport,
 from repro.dist.placement import build_shard_store, place_scans
 from repro.dist.protocol import (ABORT, DRIVER, HELLO, PROTO_VERSION, SETUP,
                                  WELCOME, PageBlock, ProtocolError,
-                                 configure_socket, decode_batch, read_frame,
-                                 write_frame)
+                                 StatsFrame, configure_socket, decode_batch,
+                                 read_frame, write_frame)
 from repro.dist.worker import connect_worker, worker_main
+from repro.obs.trace import NULL, using
 from repro.objectmodel.store import PagedStore
 
 __all__ = ["DistributedExecutor"]
@@ -113,6 +114,9 @@ class DistributedExecutor:
         self.expr_backend = expr_backend
         self.stats = ExecStats()
         self.worker_stats: List[ExecStats] = []
+        # per-rank span lists from the last traced query ([] when tracing
+        # was off) — the Session merges these into its QueryTrace
+        self.worker_spans: List[List] = []
 
     # ------------------------------------------------------------ public
     def execute(self, sink: Computation) -> Dict[str, np.ndarray]:
@@ -120,12 +124,16 @@ class DistributedExecutor:
 
     def execute_program(self, prog: TCAPProgram,
                         plan: Optional[PhysicalPlan] = None,
-                        steps=None) -> Dict[str, np.ndarray]:
+                        steps=None, trace=None) -> Dict[str, np.ndarray]:
         # `steps` (the Session's locally compiled stage plan) is accepted
         # for interface parity with Executor and ignored: each worker
         # compiles its own stages from the shipped program, deduplicated by
-        # the process-wide kernel LRU.
+        # the process-wide kernel LRU. `trace` is a SpanRecorder for the
+        # driver's own spans; it also switches per-rank recording on in
+        # every worker (spans ship back inside the done stats frame).
+        rec = NULL if trace is None else trace
         self.stats = ExecStats()
+        self.worker_spans = []
         if self.do_optimize:
             prog, rep = optimize(prog)
             self.stats.optimizer = rep
@@ -133,21 +141,26 @@ class DistributedExecutor:
         if plan is None:
             plan = plan_physical(prog, self.store, self.broadcast_threshold,
                                  num_partitions=self.P)
-        placement = place_scans(prog, self.store, self.P)
-        shards = [build_shard_store(self.store, placement, w)
-                  for w in range(self.P)]
-        if self.worker_kind == "socket":
-            runtime = _SocketRuntime(
-                self.P, self.socket_launch,
-                self.socket_addr or ("127.0.0.1", 0),
-                self.socket_accept_timeout)
-        else:
-            runtime = (_ThreadRuntime if self.worker_kind == "thread"
-                       else _ProcessRuntime)(self.P)
-        outputs, self.worker_stats = runtime.run(
-            prog, plan, shards, self.vector_rows, self.expr_backend)
-        self._aggregate_stats(prog, plan)
-        return self._assemble(prog, outputs)
+        with using(rec):
+            with rec.span("placement", cat="driver"):
+                placement = place_scans(prog, self.store, self.P)
+                shards = [build_shard_store(self.store, placement, w)
+                          for w in range(self.P)]
+            if self.worker_kind == "socket":
+                runtime = _SocketRuntime(
+                    self.P, self.socket_launch,
+                    self.socket_addr or ("127.0.0.1", 0),
+                    self.socket_accept_timeout)
+            else:
+                runtime = (_ThreadRuntime if self.worker_kind == "thread"
+                           else _ProcessRuntime)(self.P)
+            outputs, self.worker_stats, self.worker_spans = runtime.run(
+                prog, plan, shards, self.vector_rows, self.expr_backend,
+                trace=rec.enabled, rec=rec)
+            self._aggregate_stats(prog, plan)
+            with rec.span("assemble", cat="driver"):
+                result = self._assemble(prog, outputs)
+        return result
 
     # --------------------------------------------------------- internals
     def _aggregate_stats(self, prog: TCAPProgram, plan: PhysicalPlan) -> None:
@@ -157,14 +170,18 @@ class DistributedExecutor:
             agg.rows_scanned += ws.rows_scanned
             agg.rows_joined += ws.rows_joined
             agg.shuffle_bytes += ws.shuffle_bytes
-        # join counters per plan decision (each worker participates in every
-        # join, so summing worker counters would multiply by N)
+        # join and elision counters per plan decision (each worker
+        # participates in every join/exchange, so summing worker counters
+        # would multiply by N — the local executor counts each decision
+        # once, and the aggregate view must match it)
         for op in prog.ops:
             if op.op == "JOIN":
                 if plan.join_algo.get(id(op), "hash_partition") == "broadcast":
                     agg.broadcast_joins += 1
                 else:
                     agg.hash_partition_joins += 1
+            elif op.op == "AGG" and id(op) in plan.agg_elide:
+                agg.exchanges_elided += 1
 
     def _assemble(self, prog: TCAPProgram,
                   outputs: List[List]) -> Dict[str, np.ndarray]:
@@ -183,6 +200,12 @@ class DistributedExecutor:
 class _Collected:
     outputs: List[List]
     stats: List[Optional[ExecStats]]
+    spans: List[List]  # per rank; [] when that worker did not trace
+
+    def present(self) -> Tuple[List[List], List[ExecStats], List[List]]:
+        """outputs + the stats/spans of the workers that reported."""
+        return (self.outputs, [s for s in self.stats if s is not None],
+                self.spans)
 
 
 class _StarRouter:
@@ -297,22 +320,24 @@ class _ThreadRuntime:
 
     def run(self, prog: TCAPProgram, plan: PhysicalPlan,
             shards: List[PagedStore], vector_rows: int,
-            expr_backend: str = "numpy"
-            ) -> Tuple[List[List], List[ExecStats]]:
+            expr_backend: str = "numpy", trace: bool = False, rec=NULL
+            ) -> Tuple[List[List], List[ExecStats], List[List]]:
         worker_queues = [queue.SimpleQueue() for _ in range(self.P)]
         driver_queue: "queue.SimpleQueue" = queue.SimpleQueue()
         threads = []
-        for rank in range(self.P):
-            tr = ThreadTransport(rank, worker_queues, driver_queue)
-            t = threading.Thread(
-                target=worker_main,
-                args=(rank, self.P, tr, shards[rank], vector_rows, prog,
-                      plan, expr_backend),
-                name=f"pc-worker-{rank}", daemon=True)
-            threads.append(t)
-            t.start()
+        with rec.span("launch", cat="driver", kind="thread"):
+            for rank in range(self.P):
+                tr = ThreadTransport(rank, worker_queues, driver_queue)
+                t = threading.Thread(
+                    target=worker_main,
+                    args=(rank, self.P, tr, shards[rank], vector_rows, prog,
+                          plan, expr_backend, trace),
+                    name=f"pc-worker-{rank}", daemon=True)
+                threads.append(t)
+                t.start()
         try:
-            col = _collect(driver_queue, self.P)
+            with rec.span("collect", cat="wait"):
+                col = _collect(driver_queue, self.P)
         except Exception:
             # unblock peers stuck in recv waiting on the failed worker —
             # otherwise they'd pin their shard stores for the process
@@ -324,7 +349,7 @@ class _ThreadRuntime:
             raise
         for t in threads:
             t.join()
-        return col.outputs, [s for s in col.stats if s is not None]
+        return col.present()
 
 
 class _ProcessRuntime:
@@ -337,8 +362,8 @@ class _ProcessRuntime:
 
     def run(self, prog: TCAPProgram, plan: PhysicalPlan,
             shards: List[PagedStore], vector_rows: int,
-            expr_backend: str = "numpy"
-            ) -> Tuple[List[List], List[ExecStats]]:
+            expr_backend: str = "numpy", trace: bool = False, rec=NULL
+            ) -> Tuple[List[List], List[ExecStats], List[List]]:
         import multiprocessing as mp
         try:
             ctx = mp.get_context("fork")
@@ -349,17 +374,18 @@ class _ProcessRuntime:
                 "fork image) — use worker_kind='thread' here") from e
         pipes = [ctx.Pipe(duplex=True) for _ in range(self.P)]
         procs = []
-        for rank in range(self.P):
-            # fork inherits prog/plan/shards copy-on-write; the child only
-            # ever touches its own pipe end
-            p = ctx.Process(
-                target=_process_child,
-                args=(rank, self.P, pipes[rank][1], shards[rank],
-                      vector_rows, prog, plan, expr_backend),
-                name=f"pc-worker-{rank}", daemon=True)
-            procs.append(p)
-            p.start()
-            pipes[rank][1].close()  # child's end, in the parent
+        with rec.span("launch", cat="driver", kind="fork"):
+            for rank in range(self.P):
+                # fork inherits prog/plan/shards copy-on-write; the child
+                # only ever touches its own pipe end
+                p = ctx.Process(
+                    target=_process_child,
+                    args=(rank, self.P, pipes[rank][1], shards[rank],
+                          vector_rows, prog, plan, expr_backend, trace),
+                    name=f"pc-worker-{rank}", daemon=True)
+                procs.append(p)
+                p.start()
+                pipes[rank][1].close()  # child's end, in the parent
 
         conns = [pipes[rank][0] for rank in range(self.P)]
 
@@ -377,27 +403,31 @@ class _ProcessRuntime:
             # on failure collect_or_abort broadcasts the same ABORT the
             # thread runtime does: peers blocked in recv unwind instead
             # of stalling into the 30 s join timeout and a SIGTERM
-            col = router.collect_or_abort()
+            with rec.span("collect", cat="wait"):
+                col = router.collect_or_abort()
         finally:
             for p in procs:
                 p.join(timeout=30)
                 if p.is_alive():  # pragma: no cover - hung worker
                     p.terminate()
             router.stop_senders()
-        return col.outputs, [s for s in col.stats if s is not None]
+        return col.present()
 
 
 def _process_child(rank: int, P: int, conn, shard: PagedStore,
                    vector_rows: int, prog: TCAPProgram, plan: PhysicalPlan,
-                   expr_backend: str) -> None:  # pragma: no cover - forked
+                   expr_backend: str,
+                   trace: bool = False) -> None:  # pragma: no cover - forked
     tr = ProcessTransport(rank, conn)
-    worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend)
+    worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend,
+                trace)
     conn.close()
 
 
 def _socket_child(rank: int, P: int, addr: Tuple[str, int], epoch: str,
                   shard: PagedStore, vector_rows: int, prog: TCAPProgram,
-                  plan: PhysicalPlan, expr_backend: str) -> None:
+                  plan: PhysicalPlan, expr_backend: str,
+                  trace: bool = False) -> None:
     """A driver-launched socket worker (fork child or in-process thread):
     dial the rendezvous with its pre-assigned rank, then run the shard."""
     try:
@@ -406,7 +436,8 @@ def _socket_child(rank: int, P: int, addr: Tuple[str, int], epoch: str,
     except OSError:  # pragma: no cover - driver died first
         return  # the rendezvous reports the missing worker
     tr = SocketTransport(rank, sock)
-    worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend)
+    worker_main(rank, P, tr, shard, vector_rows, prog, plan, expr_backend,
+                trace)
     tr.close()
 
 
@@ -428,8 +459,8 @@ class _SocketRuntime:
 
     def run(self, prog: TCAPProgram, plan: PhysicalPlan,
             shards: List[PagedStore], vector_rows: int,
-            expr_backend: str = "numpy"
-            ) -> Tuple[List[List], List[ExecStats]]:
+            expr_backend: str = "numpy", trace: bool = False, rec=NULL
+            ) -> Tuple[List[List], List[ExecStats], List[List]]:
         if self.launch == "connect":
             try:
                 pickle.dumps(prog)
@@ -459,79 +490,86 @@ class _SocketRuntime:
                     for name, s in shards[rank].sets.items()}
             return {"prog": prog, "plan": plan_to_wire(prog, plan),
                     "vector_rows": vector_rows,
-                    "expr_backend": expr_backend, "sets": sets}
+                    "expr_backend": expr_backend, "sets": sets,
+                    "trace": trace}
 
         procs: List = []
         worker_threads: List[threading.Thread] = []
-        if self.launch == "fork":
-            import multiprocessing as mp
-            try:
-                ctx = mp.get_context("fork")
-            except ValueError as e:  # pragma: no cover - non-fork platforms
-                raise RuntimeError(
-                    "socket_launch='fork' needs the fork start method "
-                    "(native lambdas in TCAP programs cannot be pickled; "
-                    "they ride the fork image) — use socket_launch="
-                    "'thread' here, or external workers via "
-                    "socket_launch='connect'") from e
-            for rank in range(self.P):
-                p = ctx.Process(
-                    target=_socket_child,
-                    args=(rank, self.P, advert, epoch, shards[rank],
-                          vector_rows, prog, plan, expr_backend),
-                    name=f"pc-worker-{rank}", daemon=True)
-                procs.append(p)
-                p.start()
-        elif self.launch == "thread":
-            for rank in range(self.P):
-                t = threading.Thread(
-                    target=_socket_child,
-                    args=(rank, self.P, advert, epoch, shards[rank],
-                          vector_rows, prog, plan, expr_backend),
-                    name=f"pc-worker-{rank}", daemon=True)
-                worker_threads.append(t)
-                t.start()
-        else:
-            print(f"driver: waiting for {self.P} workers at {host}:{port} "
-                  f"(python -m repro.dist.worker --connect {host}:{port})",
-                  file=sys.stderr)
+        with rec.span("launch", cat="driver", kind=f"socket/{self.launch}"):
+            if self.launch == "fork":
+                import multiprocessing as mp
+                try:
+                    ctx = mp.get_context("fork")
+                except ValueError as e:  # pragma: no cover - non-fork
+                    raise RuntimeError(
+                        "socket_launch='fork' needs the fork start method "
+                        "(native lambdas in TCAP programs cannot be "
+                        "pickled; they ride the fork image) — use "
+                        "socket_launch='thread' here, or external workers "
+                        "via socket_launch='connect'") from e
+                for rank in range(self.P):
+                    p = ctx.Process(
+                        target=_socket_child,
+                        args=(rank, self.P, advert, epoch, shards[rank],
+                              vector_rows, prog, plan, expr_backend, trace),
+                        name=f"pc-worker-{rank}", daemon=True)
+                    procs.append(p)
+                    p.start()
+            elif self.launch == "thread":
+                for rank in range(self.P):
+                    t = threading.Thread(
+                        target=_socket_child,
+                        args=(rank, self.P, advert, epoch, shards[rank],
+                              vector_rows, prog, plan, expr_backend, trace),
+                        name=f"pc-worker-{rank}", daemon=True)
+                    worker_threads.append(t)
+                    t.start()
+            else:
+                print(f"driver: waiting for {self.P} workers at "
+                      f"{host}:{port} (python -m repro.dist.worker "
+                      f"--connect {host}:{port})",
+                      file=sys.stderr)
 
         try:
-            conns = self._rendezvous(listener, epoch, setup_for)
+            with rec.span("rendezvous", cat="driver", launch=self.launch):
+                conns = self._rendezvous(listener, epoch, setup_for)
         except BaseException:
             listener.close()
             for p in procs:
                 p.terminate()
             raise
 
-        router = _StarRouter(
-            self.P, read=lambda src: read_frame(conns[src]),
-            write=lambda dst, item: write_frame(conns[dst], item[0], dst,
-                                                item[1], item[2]))
-        router.start()
+        with rec.span("route:start", cat="driver"):
+            router = _StarRouter(
+                self.P, read=lambda src: read_frame(conns[src]),
+                write=lambda dst, item: write_frame(conns[dst], item[0], dst,
+                                                    item[1], item[2]))
+            router.start()
         try:
-            col = router.collect_or_abort()
+            with rec.span("collect", cat="wait"):
+                col = router.collect_or_abort()
         finally:
             # ABORT frames (if any) were enqueued before stop, so joining
             # the senders guarantees they reach the kernel send buffers
             # before the connections close (close still delivers queued
             # bytes before FIN)
-            router.stop_senders()
-            router.join_senders(10)
-            for c in conns:
-                try:
-                    c.close()
-                except OSError:  # pragma: no cover - already torn down
-                    pass
-            listener.close()
-            for p in procs:
-                p.join(timeout=30)
-                if p.is_alive():  # pragma: no cover - hung worker
-                    p.terminate()
-            for t in worker_threads:
-                t.join(timeout=10)
-            router.join_pumps(5)
-        return col.outputs, [s for s in col.stats if s is not None]
+            with rec.span("teardown", cat="driver"):
+                router.stop_senders()
+                router.join_senders(10)
+                for c in conns:
+                    try:
+                        c.close()
+                    except OSError:  # pragma: no cover - already torn down
+                        pass
+                listener.close()
+                for p in procs:
+                    p.join(timeout=30)
+                    if p.is_alive():  # pragma: no cover - hung worker
+                        p.terminate()
+                for t in worker_threads:
+                    t.join(timeout=10)
+                router.join_pumps(5)
+        return col.present()
 
     def _rendezvous(self, listener, epoch: str, setup_for):
         """Accept until all P ranks joined (or the deadline passes):
@@ -604,14 +642,19 @@ def _collect(driver_queue: "queue.SimpleQueue", P: int) -> _Collected:
     """Drain driver-bound messages until every worker reports done."""
     outputs: List[List] = [[] for _ in range(P)]
     stats: List[Optional[ExecStats]] = [None] * P
+    spans: List[List] = [[] for _ in range(P)]
     remaining = P
     while remaining:
         src, tag, msg = driver_queue.get()
         if tag == "error":
             raise RuntimeError(f"worker {src} failed:\n{msg}")
         if tag == "done":
-            stats[src] = msg
+            if isinstance(msg, StatsFrame):
+                stats[src] = msg.stats
+                spans[src] = msg.spans
+            else:  # a pre-StatsFrame peer (bare ExecStats)
+                stats[src] = msg
             remaining -= 1
         else:  # an OUTPUT gather ("<i>:output")
             outputs[src] = msg
-    return _Collected(outputs, stats)
+    return _Collected(outputs, stats, spans)

@@ -35,6 +35,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.executor import ExecStats
 from repro.dist.protocol import (ABORT, DRIVER, decode_batch, encode_batch,
                                  read_frame, write_frame)
+from repro.obs.trace import current
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["PeerAborted", "ThreadTransport", "ProcessTransport",
@@ -153,18 +154,21 @@ def exchange_partitions(tr, P: int, tag: str,
     partition ``p`` (sub-batches in batch order). Returns, per source rank,
     the sub-batches that landed here — own bucket stays unserialized."""
     rank = tr.rank
-    for dst in range(P):
-        if dst == rank:
-            continue
-        blocks = [encode_batch(vl) for vl in buckets[dst]]
-        stats.shuffle_bytes += sum(b.nbytes for b in blocks)
-        tr.send(dst, tag, blocks)
-    inbox: List[List[VectorList]] = []
-    for src in range(P):
-        if src == rank:
-            inbox.append(buckets[rank])
-        else:
-            inbox.append([decode_batch(b) for b in tr.recv(src, tag)])
+    sb0 = stats.shuffle_bytes
+    with current().span(f"x:shuffle:{tag}", cat="exchange", tag=tag) as sp:
+        for dst in range(P):
+            if dst == rank:
+                continue
+            blocks = [encode_batch(vl) for vl in buckets[dst]]
+            stats.shuffle_bytes += sum(b.nbytes for b in blocks)
+            tr.send(dst, tag, blocks)
+        inbox: List[List[VectorList]] = []
+        for src in range(P):
+            if src == rank:
+                inbox.append(buckets[rank])
+            else:
+                inbox.append([decode_batch(b) for b in tr.recv(src, tag)])
+    sp.set(bytes=stats.shuffle_bytes - sb0)
     return inbox
 
 
@@ -173,17 +177,21 @@ def all_gather(tr, P: int, tag: str, batches: List[VectorList],
     """Broadcast: replicate this worker's batches to every peer; returns
     all workers' batches in rank order (serialize once, ship P-1 times)."""
     rank = tr.rank
-    blocks = None
-    for dst in range(P):
-        if dst == rank:
-            continue
-        if blocks is None:
-            blocks = [encode_batch(vl) for vl in batches]
-        stats.shuffle_bytes += sum(b.nbytes for b in blocks)
-        tr.send(dst, tag, blocks)
-    return [batches if src == rank else
-            [decode_batch(b) for b in tr.recv(src, tag)]
-            for src in range(P)]
+    sb0 = stats.shuffle_bytes
+    with current().span(f"x:bcast:{tag}", cat="exchange", tag=tag) as sp:
+        blocks = None
+        for dst in range(P):
+            if dst == rank:
+                continue
+            if blocks is None:
+                blocks = [encode_batch(vl) for vl in batches]
+            stats.shuffle_bytes += sum(b.nbytes for b in blocks)
+            tr.send(dst, tag, blocks)
+        out = [batches if src == rank else
+               [decode_batch(b) for b in tr.recv(src, tag)]
+               for src in range(P)]
+    sp.set(bytes=stats.shuffle_bytes - sb0)
+    return out
 
 
 def gather_to(tr, P: int, tag: str, root: int,
@@ -193,11 +201,16 @@ def gather_to(tr, P: int, tag: str, root: int,
     rank, or :data:`DRIVER`). Returns the per-source batch lists at the
     root, ``None`` elsewhere."""
     rank = tr.rank
-    if rank != root:
-        blocks = [encode_batch(vl) for vl in batches]
-        stats.shuffle_bytes += sum(b.nbytes for b in blocks)
-        tr.send(root, tag, blocks)
-        return None
-    return [batches if src == rank else
-            [decode_batch(b) for b in tr.recv(src, tag)]
-            for src in range(P)]
+    sb0 = stats.shuffle_bytes
+    with current().span(f"x:gather:{tag}", cat="exchange", tag=tag) as sp:
+        if rank != root:
+            blocks = [encode_batch(vl) for vl in batches]
+            stats.shuffle_bytes += sum(b.nbytes for b in blocks)
+            tr.send(root, tag, blocks)
+            out = None
+        else:
+            out = [batches if src == rank else
+                   [decode_batch(b) for b in tr.recv(src, tag)]
+                   for src in range(P)]
+    sp.set(bytes=stats.shuffle_bytes - sb0)
+    return out

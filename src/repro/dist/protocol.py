@@ -36,10 +36,10 @@ from repro.objectmodel.store import PagedSet
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["ABORT", "DRIVER", "HELLO", "WELCOME", "SETUP", "PROTO_VERSION",
-           "PageBlock", "PickleBlock", "ProtocolError", "encode_batch",
-           "decode_batch", "encode_agg_map", "decode_agg_map",
-           "frame_buffers", "write_frame", "read_frame", "decode_frame",
-           "configure_socket"]
+           "PageBlock", "PickleBlock", "ProtocolError", "StatsFrame",
+           "encode_batch", "decode_batch", "encode_agg_map",
+           "decode_agg_map", "frame_buffers", "write_frame", "read_frame",
+           "decode_frame", "configure_socket"]
 
 DRIVER = -1  # transport address of the driver
 ABORT = "__abort__"  # driver -> workers: a peer failed, stop waiting
@@ -66,6 +66,26 @@ class PageBlock:
     @property
     def nbytes(self) -> int:
         return sum(raw.nbytes for _, raw in self.payloads)
+
+
+class StatsFrame:
+    """A worker's end-of-query report: its :class:`~repro.core.executor
+    .ExecStats` plus the spans its recorder collected (empty when tracing
+    is off). Rides the ``done`` message over every transport — pipes
+    pickle it whole; the socket framing carries it through the generic
+    object path (spans are plain dataclasses of ints/strs)."""
+
+    __slots__ = ("stats", "spans")
+
+    def __init__(self, stats, spans=None):
+        self.stats = stats
+        self.spans = spans if spans is not None else []
+
+    def __getstate__(self):
+        return (self.stats, self.spans)
+
+    def __setstate__(self, state):
+        self.stats, self.spans = state
 
 
 class PickleBlock:

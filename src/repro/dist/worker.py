@@ -38,14 +38,21 @@ from repro.core.tcap import TCAPOp, TCAPProgram
 from repro.dist.exchange import (PeerAborted, SocketTransport, all_gather,
                                  exchange_partitions, gather_to)
 from repro.dist.protocol import (DRIVER, HELLO, PROTO_VERSION, SETUP,
-                                 WELCOME, ProtocolError, configure_socket,
-                                 decode_agg_map, encode_agg_map, read_frame,
-                                 write_frame)
+                                 WELCOME, ProtocolError, StatsFrame,
+                                 configure_socket, decode_agg_map,
+                                 encode_agg_map, read_frame, write_frame)
+from repro.obs.trace import NULL, SpanRecorder, op_name, using
 from repro.objectmodel.store import PagedSet, PagedStore
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["WorkerRuntime", "worker_main", "connect_worker",
            "run_remote_worker", "main"]
+
+
+def _batch_rows(batches: List[VectorList]) -> int:
+    """Total rows across a batch list (trace attribute only — called
+    solely when a recorder is enabled)."""
+    return sum(vl.num_rows or 0 for vl in batches)
 
 
 class WorkerRuntime:
@@ -63,8 +70,10 @@ class WorkerRuntime:
         self.stats = ExecStats()
 
     # ------------------------------------------------------------ driver
-    def run(self, prog: TCAPProgram, plan: PhysicalPlan) -> None:
+    def run(self, prog: TCAPProgram, plan: PhysicalPlan, rec=NULL) -> None:
         """Execute the program; OUTPUT batches stream to the driver.
+        ``rec`` is this rank's span recorder (per-op spans; the exchange
+        patterns pick it up ambiently via ``obs.trace.using``).
 
         The worker compiles its own stage plan from the shipped program
         (:func:`~repro.core.exprc.build_steps`) — compilation is
@@ -81,30 +90,41 @@ class WorkerRuntime:
         i = -1  # op index within prog (exchange tags key on it)
         for step in steps:
             if isinstance(step, FusedStage):
-                i += len(step.ops)
-                data[step.out] = [step(vl) for vl in data[step.in_list]]
+                first, i = i + 1, i + len(step.ops)
+                name = op_name(first, i, [o.op for o in step.ops])
+                with rec.span(name, cat="op", idx=first) as sp:
+                    data[step.out] = [step(vl) for vl in data[step.in_list]]
+                if rec.enabled:
+                    sp.set(rows=_batch_rows(data[step.out]))
                 continue
             op = step
             i += 1
-            if op.op == "SCAN":
-                data[op.out] = self._scan(op)
-            elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
-                kern = batch_kernel(op)
-                data[op.out] = [kern(vl) for vl in data[op.in_list]]
-            elif op.op == "JOIN":
-                algo = plan.join_algo.get(id(op), "hash_partition")
-                data[op.out] = self._join(op, i, data[op.in_list],
-                                          data[op.in_list2], algo)
-            elif op.op == "AGG":
-                data[op.out] = self._aggregate(
-                    op, i, data[op.in_list],
-                    elide=id(op) in plan.agg_elide)
-            elif op.op == "TOPK":
-                data[op.out] = self._topk(op, i, data[op.in_list])
-            elif op.op == "OUTPUT":
-                self._output(op, i, data[op.in_list])
-            else:
-                raise ValueError(f"unknown op {op.op}")
+            sb0 = self.stats.shuffle_bytes
+            with rec.span(op_name(i, i, [op.op]), cat="op",
+                          idx=i, op=op.op) as sp:
+                if op.op == "SCAN":
+                    data[op.out] = self._scan(op)
+                elif op.op in ("APPLY", "FILTER", "FLATTEN", "HASH"):
+                    kern = batch_kernel(op)
+                    data[op.out] = [kern(vl) for vl in data[op.in_list]]
+                elif op.op == "JOIN":
+                    algo = plan.join_algo.get(id(op), "hash_partition")
+                    data[op.out] = self._join(op, i, data[op.in_list],
+                                              data[op.in_list2], algo)
+                elif op.op == "AGG":
+                    data[op.out] = self._aggregate(
+                        op, i, data[op.in_list],
+                        elide=id(op) in plan.agg_elide)
+                elif op.op == "TOPK":
+                    data[op.out] = self._topk(op, i, data[op.in_list])
+                elif op.op == "OUTPUT":
+                    self._output(op, i, data[op.in_list])
+                else:
+                    raise ValueError(f"unknown op {op.op}")
+            if rec.enabled:
+                sp.set(rows=(self.stats.rows_output if op.op == "OUTPUT"
+                             else _batch_rows(data[op.out])),
+                       bytes=self.stats.shuffle_bytes - sb0)
 
     # --------------------------------------------------------------- ops
     def _scan(self, op: TCAPOp) -> List[VectorList]:
@@ -221,16 +241,23 @@ class WorkerRuntime:
 
 def worker_main(rank: int, num_workers: int, transport, shard: PagedStore,
                 vector_rows: int, prog: TCAPProgram,
-                plan: PhysicalPlan, expr_backend: str = "numpy") -> bool:
+                plan: PhysicalPlan, expr_backend: str = "numpy",
+                trace: bool = False) -> bool:
     """Entry point for every worker kind: run, then report stats (or the
-    failure) to the driver. Returns whether the query completed here —
-    False when it aborted (a peer failed) or this worker errored, so
-    process-worker entry points can exit nonzero for supervisors."""
+    failure) to the driver. With ``trace=True`` the worker records its own
+    rank-attributed spans and ships them back inside the ``done`` stats
+    frame. Returns whether the query completed here — False when it
+    aborted (a peer failed) or this worker errored, so process-worker
+    entry points can exit nonzero for supervisors."""
     rt = WorkerRuntime(rank, num_workers, transport, shard, vector_rows,
                        expr_backend)
+    rec = SpanRecorder(rank=rank) if trace else NULL
     try:
-        rt.run(prog, plan)
-        transport.send(DRIVER, "done", rt.stats)
+        with using(rec):
+            with rec.span("worker", cat="phase", rank=rank):
+                rt.run(prog, plan, rec)
+        transport.send(DRIVER, "done",
+                       StatsFrame(rt.stats, list(rec.spans)))
         return True
     except PeerAborted:
         return False  # the driver raised already; nothing left to report
@@ -321,7 +348,8 @@ def run_remote_worker(addr: Tuple[str, int], serve: bool = False,
                 name, dtype, block.payloads, page_size)
         tr = SocketTransport(rank, sock)
         ok = worker_main(rank, P, tr, shard, setup["vector_rows"], prog,
-                         plan, setup["expr_backend"])
+                         plan, setup["expr_backend"],
+                         trace=bool(setup.get("trace", False)))
         tr.close()
         if ok:
             queries += 1

@@ -1,0 +1,294 @@
+"""Observability: span traces, metrics, explain(analyze=True), Perfetto.
+
+What must hold:
+
+* span-tree *shape* is deterministic — same query, same backend, same
+  tree, run after run — and the op-span names are identical between the
+  local executor and every worker rank (the fused-stage naming is shared
+  via :func:`repro.obs.trace.op_name`);
+* tracing never changes results: trace-on vs trace-off collect() output
+  is byte-identical on every backend;
+* the Chrome trace export is valid trace_event JSON with one lane per
+  rank plus the driver lane, and flow arrows on the exchanges;
+* ExecStats stay per-query (two back-to-back queries don't bleed into
+  each other) while the process-wide METRICS registry accumulates;
+* ``explain(analyze=True)`` actually executes and its table accounts
+  for ≥90% of the measured query wall — on the acceptance query (TPC-H
+  Q1 over the socket transport, N=2) too.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Session
+from repro.obs import METRICS, QueryTrace, SpanRecorder, op_name, using
+
+EXPR_BACKENDS = ("interp", "numpy", "jax")
+
+EMP_DT = np.dtype([("dept", np.int64), ("salary", np.int64)])
+
+
+def _emps(n=600, seed=3):
+    rng = np.random.default_rng(seed)
+    out = np.zeros(n, EMP_DT)
+    out["dept"] = rng.integers(0, 8, n)
+    out["salary"] = rng.integers(1, 1000, n)
+    return out
+
+
+def _query(sess):
+    from repro.core import agg
+    return (sess.load("emps", _emps(), type_name="Emp")
+            .filter(lambda e: e.salary > 100)
+            .group_by("dept")
+            .agg(total=agg.sum("salary"), n=agg.count()))
+
+
+def _backends():
+    yield pytest.param({}, id="local")
+    yield pytest.param({"backend": "workers", "num_workers": 2}, id="thread")
+    yield pytest.param({"backend": "workers", "num_workers": 2,
+                        "worker_kind": "socket"}, id="socket",
+                       marks=pytest.mark.socket)
+
+
+# ------------------------------------------------------------- span trees
+@pytest.mark.parametrize("expr_backend", EXPR_BACKENDS)
+@pytest.mark.parametrize("kw", _backends())
+def test_span_tree_shape(expr_backend, kw):
+    if kw.get("worker_kind") == "socket" and expr_backend == "jax":
+        # fork-launch x jax is refused at build time; in-process workers
+        # over real TCP keep XLA's runtime threads alive
+        kw = {**kw, "socket_launch": "thread"}
+    sess = Session(expr_backend=expr_backend, trace=True, **kw)
+    _query(sess).collect()
+    t = sess.last_trace
+    assert t is not None
+    root = t.root()
+    assert root.name == "query" and root.cat == "query"
+    # the plan phase records its five sub-phases
+    names = {(sp.rank, sp.name) for sp in t.spans}
+    for ph in ("plan:compile", "plan:optimize", "plan:physical",
+               "plan:analyze", "plan:stages"):
+        assert (None, ph) in names
+    assert (None, "execute") in names
+    # driver op spans (local) or per-rank op spans (workers) exist
+    driver_ops = {sp.name for sp in t.spans
+                  if sp.rank is None and sp.cat == "op"}
+    if not kw:
+        assert driver_ops, "local backend records driver op spans"
+    else:
+        assert t.ranks() == list(range(kw["num_workers"]))
+        for r in t.ranks():
+            rank_ops = {sp.name for sp in t.spans
+                        if sp.rank == r and sp.cat == "op"}
+            assert rank_ops, f"rank {r} recorded no op spans"
+
+
+@pytest.mark.parametrize("expr_backend", EXPR_BACKENDS)
+def test_op_span_names_identical_local_vs_workers(expr_backend):
+    traces = []
+    for kw in ({}, {"backend": "workers", "num_workers": 2}):
+        sess = Session(expr_backend=expr_backend, trace=True, **kw)
+        _query(sess).collect()
+        traces.append(sess.last_trace)
+    local_ops = {sp.name for sp in traces[0].spans if sp.cat == "op"}
+    for r in traces[1].ranks():
+        rank_ops = {sp.name for sp in traces[1].spans
+                    if sp.rank == r and sp.cat == "op"}
+        assert rank_ops == local_ops
+
+
+@pytest.mark.parametrize("kw", _backends())
+def test_span_shape_deterministic_across_runs(kw):
+    shapes = []
+    for _ in range(2):
+        sess = Session(trace=True, **kw)
+        _query(sess).collect()
+        shapes.append(sess.last_trace.shape())
+    assert shapes[0] == shapes[1]
+
+
+@pytest.mark.parametrize("kw", _backends())
+def test_trace_off_byte_identical(kw):
+    outs = []
+    for trace in (False, True):
+        sess = Session(trace=trace, **kw)
+        outs.append(_query(sess).collect())
+    a, b = outs
+    assert list(a.keys()) == list(b.keys())
+    for k in a:
+        assert np.asarray(a[k]).tobytes() == np.asarray(b[k]).tobytes()
+
+
+def test_trace_off_records_nothing():
+    sess = Session()
+    _query(sess).collect()
+    assert sess.last_trace is None
+
+
+# ------------------------------------------------------------ chrome trace
+def _valid_chrome(trace_dict, want_ranks):
+    assert set(trace_dict) == {"traceEvents", "metadata"}
+    events = trace_dict["traceEvents"]
+    assert isinstance(events, list) and events
+    pids = set()
+    for ev in events:
+        assert ev["ph"] in ("X", "M", "s", "t", "f")
+        assert isinstance(ev["pid"], int) and ev["pid"] >= 0
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0 and ev["dur"] >= 0
+            pids.add(ev["pid"])
+    # one lane per rank plus the driver lane
+    assert pids == {0} | {r + 1 for r in want_ranks}
+    meta = {ev["pid"]: ev["args"]["name"] for ev in events
+            if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert meta[0] == "driver"
+    for r in want_ranks:
+        assert meta[r + 1] == f"worker {r}"
+    json.dumps(events)  # round-trips
+
+
+def test_chrome_trace_schema(tmp_path):
+    sess = Session(backend="workers", num_workers=2, trace=True)
+    _query(sess).collect()
+    path = tmp_path / "trace.json"
+    trace = sess.last_trace.to_chrome_trace(str(path))
+    _valid_chrome(trace, [0, 1])
+    assert json.loads(path.read_text()) == json.loads(json.dumps(trace))
+    # exchanges draw flow arrows between lanes
+    events = trace["traceEvents"]
+    assert any(ev["ph"] == "s" for ev in events)
+    assert any(ev["ph"] == "f" for ev in events)
+
+
+def test_chrome_trace_local_single_lane(tmp_path):
+    sess = Session(trace=True)
+    _query(sess).collect()
+    events = sess.last_trace.to_chrome_trace()["traceEvents"]
+    assert {ev["pid"] for ev in events if ev["ph"] == "X"} == {0}
+
+
+# ------------------------------------------------------- stats and metrics
+def test_exec_stats_per_query_metrics_cumulative():
+    """Two back-to-back queries: per-query ExecStats reset, the
+    process-wide registry accumulates (the satellite-1 regression)."""
+    sess = Session(backend="workers", num_workers=2)
+    ds = _query(sess)
+    before = METRICS.snapshot()["counters"]
+    ds.collect()
+    st1 = sess.last_stats
+    ds.collect()
+    st2 = sess.last_stats
+    # per-query: the second run saw the same data, not 2x of it
+    assert st2.rows_scanned == st1.rows_scanned
+    assert st2.shuffle_bytes == st1.shuffle_bytes
+    after = METRICS.snapshot()["counters"]
+    assert (after.get("queries.total", 0)
+            - before.get("queries.total", 0)) == 2
+    assert (after.get("rows.scanned.total", 0)
+            - before.get("rows.scanned.total", 0)
+            == st1.rows_scanned + st2.rows_scanned)
+    assert (after.get("shuffle.bytes.total", 0)
+            - before.get("shuffle.bytes.total", 0)
+            == st1.shuffle_bytes + st2.shuffle_bytes)
+    assert METRICS.snapshot()["gauges"]["query.wall_ms.last"] >= 0.0
+
+
+def test_plan_cache_metrics():
+    before = METRICS.snapshot()["counters"].get("plan_cache.hits", 0)
+    sess = Session()
+    ds = _query(sess)
+    ds.collect()
+    ds.collect()  # same structural signature -> plan-cache hit
+    after = METRICS.snapshot()["counters"]["plan_cache.hits"]
+    assert after > before
+
+
+def test_metrics_registry_basics():
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.inc("a")
+    reg.inc("a", 4)
+    reg.gauge("g", 2.5)
+    snap = reg.snapshot()
+    assert snap["counters"]["a"] == 5
+    assert snap["gauges"]["g"] == 2.5
+    snap["counters"]["a"] = 99  # snapshot is a copy
+    assert reg.snapshot()["counters"]["a"] == 5
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {}}
+
+
+# ------------------------------------------------------- explain(analyze)
+def _coverage(text):
+    for line in text.splitlines():
+        if "table covers" in line:
+            return float(line.split("covers")[1].split("%")[0])
+    raise AssertionError(f"no coverage footer in:\n{text}")
+
+
+def test_explain_analyze_local():
+    sess = Session()
+    out = _query(sess).explain(analyze=True)
+    assert "analyze: per-op wall/rows/bytes" in out
+    assert "plan:compile" in out
+    assert _coverage(out) >= 90.0
+    assert sess.last_trace is not None  # trace retained for export
+
+
+def test_explain_analyze_workers_includes_transport():
+    sess = Session(backend="workers", num_workers=2)
+    out = _query(sess).explain(analyze=True)
+    assert "2 ranks, transport=thread" in out
+    assert "workers run here" in out
+    assert _coverage(out) >= 90.0
+    # the last-run block names the transport and per-rank elision
+    assert "per-worker shuffle_bytes/exchanges_elided" in out
+    assert "transport=thread" in out
+
+
+@pytest.mark.socket
+def test_acceptance_tpch_q1_socket_analyze(tmp_path):
+    """ISSUE acceptance: explain(analyze=True) on TPC-H Q1 over the
+    socket transport with two workers — per-op table covering ≥90% of
+    wall, spans from every rank, Perfetto export valid."""
+    from repro.apps.tpch import q1_pricing_summary
+    from repro.data.synthetic import tpch_q1_lineitems
+    sess = Session(backend="workers", num_workers=2, worker_kind="socket")
+    ds = sess.load("lineitem", tpch_q1_lineitems(4000, seed=5))
+    q1 = q1_pricing_summary(sess.store, ds.set_name, session=sess)
+    out = q1.explain(analyze=True)
+    assert "2 ranks, transport=socket" in out
+    assert _coverage(out) >= 90.0
+    t = sess.last_trace
+    assert t.ranks() == [0, 1]
+    for r in t.ranks():
+        assert any(sp.rank == r and sp.cat == "op" for sp in t.spans)
+    _valid_chrome(t.to_chrome_trace(str(tmp_path / "q1.json")), [0, 1])
+
+
+# ----------------------------------------------------------- trace helpers
+def test_op_name_formats():
+    assert op_name(3, 3, ["FILTER"]) == "op3:FILTER"
+    assert op_name(1, 4, ["APPLY", "FILTER"]) == "op1-4:APPLY+FILTER"
+
+
+def test_query_trace_find_and_merge():
+    rec = SpanRecorder()
+    with using(rec):
+        with rec.span("query", cat="query"):
+            with rec.span("execute", cat="phase"):
+                pass
+    w = SpanRecorder(rank=0)
+    with using(w):
+        with w.span("worker", cat="phase"):
+            pass
+    t = QueryTrace.merge(rec, [list(w.spans)], transport="thread")
+    assert t.meta["transport"] == "thread"
+    assert t.find("worker", rank=0)
+    assert t.find("execute") and t.find("execute")[0].rank is None
+    assert t.ranks() == [0]

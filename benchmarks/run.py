@@ -21,6 +21,10 @@ derived fields) for tracking results across commits.
   analysis -> bench_analysis     (planlint wall-time vs compile budget;
                                   shuffle bytes with/without the
                                   redundant-exchange elision)
+  service  -> bench_service      (persistent pool: cold vs warm latency,
+                                  re-shipped SETUP bytes, queries/sec at
+                                  K concurrent sessions vs the one-shot
+                                  socket driver)
   §Roofline -> roofline          (from dry-run artifacts, if present)
 """
 from __future__ import annotations
@@ -75,7 +79,7 @@ def main(argv=None) -> None:
     from benchmarks import (bench_agg, bench_analysis, bench_api,
                             bench_dist, bench_expr, bench_kernels,
                             bench_linalg, bench_ml, bench_oo,
-                            bench_objectmodel)
+                            bench_objectmodel, bench_service)
     suites = [
         ("linalg", bench_linalg.run),
         ("oo", bench_oo.run),
@@ -87,6 +91,7 @@ def main(argv=None) -> None:
         ("agg", bench_agg.run),
         ("dist", bench_dist.run),
         ("analysis", bench_analysis.run),
+        ("service", bench_service.run),
     ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}

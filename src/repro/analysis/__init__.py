@@ -13,9 +13,12 @@ from repro.analysis.capability import (BuildConfig, capability_diagnostics,
                                        check_session_config,
                                        check_worker_config)
 from repro.analysis.diagnostics import AnalysisReport, Diagnostic
+from repro.analysis.footprint import (PlanFootprint,
+                                      estimate_plan_footprint)
 from repro.analysis.partitioning import propagate_partitioning
 from repro.analysis.schema_pass import schema_pass
 
-__all__ = ["AnalysisReport", "BuildConfig", "Diagnostic", "analyze",
-           "capability_diagnostics", "check_session_config",
-           "check_worker_config", "propagate_partitioning", "schema_pass"]
+__all__ = ["AnalysisReport", "BuildConfig", "Diagnostic", "PlanFootprint",
+           "analyze", "capability_diagnostics", "check_session_config",
+           "check_worker_config", "estimate_plan_footprint",
+           "propagate_partitioning", "schema_pass"]

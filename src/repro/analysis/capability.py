@@ -42,6 +42,7 @@ class BuildConfig:
     expr_backend: str = "numpy"
     plan_cache_size: int = 64
     custom_executor: bool = False  # executor_cls other than the default
+    has_service: bool = False      # a QueryService was passed (service=)
 
 
 # ------------------------------------------------------ session-level
@@ -67,6 +68,24 @@ def session_config_violation(cfg: BuildConfig) -> Optional[str]:
             return ("worker_kind='socket' with socket_launch='connect' "
                     "needs an explicit num_workers — the driver must know "
                     "how many external workers to await at the rendezvous")
+    elif cfg.backend == "service":
+        if not cfg.has_service:
+            return ("backend='service' attaches to a running QueryService "
+                    "— pass service=<QueryService> (or use "
+                    "Session.connect(service))")
+        if cfg.custom_executor:
+            return ("backend='service' chooses its own executor — drop "
+                    "the executor_cls argument")
+        if cfg.num_workers is not None or cfg.num_partitions is not None:
+            return ("the worker pool size is fixed by the QueryService — "
+                    "drop num_workers/num_partitions for "
+                    "backend='service'")
+        if cfg.worker_kind is not None:
+            return ("worker_kind is fixed by the QueryService's launch "
+                    "mode — drop it for backend='service'")
+        if cfg.socket_launch is not None or cfg.socket_addr is not None:
+            return ("socket_launch/socket_addr are fixed by the "
+                    "QueryService — drop them for backend='service'")
     elif cfg.backend == "local":
         if cfg.num_workers is not None:
             return ("num_workers only applies to backend='workers' "
@@ -79,7 +98,11 @@ def session_config_violation(cfg: BuildConfig) -> Optional[str]:
                     "backend='workers' with worker_kind='socket'")
     else:
         return (f"unknown backend {cfg.backend!r} "
-                "(expected 'local' or 'workers')")
+                "(expected 'local', 'workers', or 'service')")
+    if cfg.backend != "service" and cfg.has_service:
+        return ("service= only applies to backend='service' — a "
+                "QueryService was passed but this session would not "
+                "use it")
     if cfg.plan_cache_size < 1:
         return "plan_cache_size must be >= 1"
     return None
@@ -151,17 +174,31 @@ def check_worker_config(num_workers: int, expr_backend: str,
 def capability_diagnostics(prog: TCAPProgram,
                            cfg: Optional[BuildConfig]) -> List[Diagnostic]:
     diags: List[Diagnostic] = []
-    if (cfg is not None and cfg.worker_kind == "socket"
-            and cfg.socket_launch == "connect"):
-        for i, op in enumerate(prog.ops):
-            if op.op == "APPLY" and op.info.get("type") == "native":
-                diags.append(Diagnostic(
-                    "PL301", "error",
-                    "socket_launch='connect' ships the TCAP program to "
-                    "external workers by pickling, and native Python "
-                    "lambdas (make_lambda) only exist in-process — "
-                    f"stage {op.stage!r} cannot cross the wire; express "
-                    "the query in the lambda DSL, or run "
-                    "socket_launch='fork' workers on the driver host",
-                    op_path(i, op)))
+    if cfg is None:
+        return diags
+    # PL301: the program must cross the wire pickled. True for external
+    # socket workers, and for EVERY service pool launch — the resident
+    # pool exists before any query does (no fork image to ride), so
+    # QUERY frames always pickle the program.
+    if cfg.worker_kind == "socket" and cfg.socket_launch == "connect":
+        reason = ("socket_launch='connect' ships the TCAP program to "
+                  "external workers by pickling")
+        remedy = ("express the query in the lambda DSL, or run "
+                  "socket_launch='fork' workers on the driver host")
+    elif cfg.backend == "service":
+        reason = ("backend='service' ships the TCAP program to resident "
+                  "pool workers by pickling (the pool outlives any one "
+                  "query, so no launch mode can carry native lambdas in "
+                  "a fork image)")
+        remedy = "express the query in the lambda DSL"
+    else:
+        return diags
+    for i, op in enumerate(prog.ops):
+        if op.op == "APPLY" and op.info.get("type") == "native":
+            diags.append(Diagnostic(
+                "PL301", "error",
+                f"{reason}, and native Python lambdas (make_lambda) "
+                f"only exist in-process — stage {op.stage!r} cannot "
+                f"cross the wire; {remedy}",
+                op_path(i, op)))
     return diags

@@ -102,7 +102,21 @@ class Session:
                  plan_cache_size: int = 64,
                  expr_backend: str = "numpy",
                  elide_exchanges: bool = True,
-                 trace: bool = False):
+                 trace: bool = False,
+                 service=None):
+        if backend == "service" and service is not None:
+            # client sessions share the service's store (the catalog and
+            # the pool's resident shards are keyed against it) — a
+            # different store here would plan against data the pool
+            # cannot see
+            if store is not None and store is not service.store:
+                raise ValueError(
+                    "backend='service' sessions share the QueryService's "
+                    "store — drop the store argument (or pass "
+                    "service.store)")
+            store = service.store
+            expr_backend = service.expr_backend
+        self.service = service
         self.store = store if store is not None else PagedStore()
         self.db = db
         self.scope = NameScope()
@@ -129,11 +143,15 @@ class Session:
             num_workers=num_workers, worker_kind=worker_kind,
             socket_launch=socket_launch, socket_addr=socket_addr,
             expr_backend=expr_backend, plan_cache_size=plan_cache_size,
-            custom_executor=executor_cls is not Executor)
+            custom_executor=executor_cls is not Executor,
+            has_service=service is not None)
         check_session_config(self._build_config)
         # the session drives optimization itself (through the plan cache),
         # so its executor always runs programs as given.
-        if backend == "workers":
+        if backend == "service":
+            from repro.service.service import ServiceExecutor
+            self.executor = ServiceExecutor(service)
+        elif backend == "workers":
             from repro.dist.driver import DistributedExecutor
             self.executor = DistributedExecutor(
                 self.store,
@@ -160,6 +178,16 @@ class Session:
         self.phys_misses = 0
         self.last_stats = None
         self.last_report: Optional[OptimizerReport] = None
+
+    # ----------------------------------------------------------- service
+    @classmethod
+    def connect(cls, service, **kw) -> "Session":
+        """A client session over a running
+        :class:`~repro.service.service.QueryService` — shorthand for
+        ``Session(backend="service", service=service)``. Any number of
+        clients may connect to one service; their queries interleave on
+        the shared pool under its admission control."""
+        return cls(backend="service", service=service, **kw)
 
     # ------------------------------------------------------------ naming
     def fresh_set_name(self, prefix: str) -> str:
@@ -359,9 +387,24 @@ class Session:
                 "pick a fresh name (Session.fresh_set_name) to avoid "
                 "silently reading stale or merged data")
         rec = SpanRecorder() if self.trace else NULL
-        result, rep = self._traced_execute(ds, rec)
+        # the service backend materializes write() worker-side: the pool
+        # packs each rank's output partition into catalog-registered
+        # resident shards (no page round-trip through the driver), so the
+        # driver-side materialization below is skipped — the collect()
+        # result is empty; read the set back to see the rows
+        service_write = (self.backend == "service"
+                         and write_name is not None
+                         and not ds._materialized)
+        if service_write:
+            self.executor.write_name = write_name
+        try:
+            result, rep = self._traced_execute(ds, rec)
+        finally:
+            if service_write:
+                self.executor.write_name = None
         if write_name is not None and not ds._materialized:
-            self._materialize(write_name, result)
+            if not service_write:
+                self._materialize(write_name, result)
             ds._materialized = True
         return result
 
@@ -443,10 +486,14 @@ class Session:
                                  self.executor.broadcast_threshold,
                                  num_partitions=self.executor.P,
                                  elide_exchanges=self.elide_exchanges)
-        backend = (f"workers x{self.executor.P} "
-                   f"via {self.executor.worker_kind}"
-                   if self.backend == "workers"
-                   else f"local sim x{self.executor.P}")
+        if self.backend == "workers":
+            backend = (f"workers x{self.executor.P} "
+                       f"via {self.executor.worker_kind}")
+        elif self.backend == "service":
+            backend = (f"service pool x{self.executor.P} "
+                       f"via {self.service.launch}")
+        else:
+            backend = f"local sim x{self.executor.P}"
         lines = [f"== optimized TCAP ({len(prog)} ops) =="]
         if rep is not None:
             lines.append(
@@ -486,11 +533,18 @@ class Session:
         """Execution stats from the session's most recent query, if any —
         for backend='workers' the shuffle_bytes are real serialized page
         traffic, reported per worker with the transport named (rendering
-        single-sourced in :mod:`repro.obs.render`)."""
-        return last_run_lines(
+        single-sourced in :mod:`repro.obs.render`). Service sessions add
+        the admission/catalog footer — the observable feedback loop."""
+        lines = last_run_lines(
             self.last_stats,
             getattr(self.executor, "worker_stats", None),
             getattr(self.executor, "worker_kind", None))
+        if self.backend == "service" and self.service is not None:
+            from repro.obs.render import service_lines
+            lines.extend(service_lines(
+                self.service, getattr(self.executor,
+                                      "last_setup_bytes", 0)))
+        return lines
 
     # ------------------------------------------------------------ stats
     def plan_cache_info(self) -> Dict[str, int]:

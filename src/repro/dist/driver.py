@@ -117,6 +117,10 @@ class DistributedExecutor:
         # per-rank span lists from the last traced query ([] when tracing
         # was off) — the Session merges these into its QueryTrace
         self.worker_spans: List[List] = []
+        # shard page bytes shipped in SETUP frames by the last query —
+        # 0 for non-connect launches (shards ride the fork image / shared
+        # address space) and for fully warm `--serve` reconnects
+        self.last_setup_bytes = 0
 
     # ------------------------------------------------------------ public
     def execute(self, sink: Computation) -> Dict[str, np.ndarray]:
@@ -146,17 +150,24 @@ class DistributedExecutor:
                 placement = place_scans(prog, self.store, self.P)
                 shards = [build_shard_store(self.store, placement, w)
                           for w in range(self.P)]
+            self.last_setup_bytes = 0
             if self.worker_kind == "socket":
                 runtime = _SocketRuntime(
                     self.P, self.socket_launch,
                     self.socket_addr or ("127.0.0.1", 0),
                     self.socket_accept_timeout)
+                versions = {name: self.store.set_version(name)
+                            for name in placement}
+                outputs, self.worker_stats, self.worker_spans = runtime.run(
+                    prog, plan, shards, self.vector_rows, self.expr_backend,
+                    trace=rec.enabled, rec=rec, set_versions=versions)
+                self.last_setup_bytes = runtime.setup_bytes
             else:
                 runtime = (_ThreadRuntime if self.worker_kind == "thread"
                            else _ProcessRuntime)(self.P)
-            outputs, self.worker_stats, self.worker_spans = runtime.run(
-                prog, plan, shards, self.vector_rows, self.expr_backend,
-                trace=rec.enabled, rec=rec)
+                outputs, self.worker_stats, self.worker_spans = runtime.run(
+                    prog, plan, shards, self.vector_rows, self.expr_backend,
+                    trace=rec.enabled, rec=rec)
             self._aggregate_stats(prog, plan)
             with rec.span("assemble", cat="driver"):
                 result = self._assemble(prog, outputs)
@@ -448,7 +459,25 @@ class _SocketRuntime:
     broadcast so a dead peer unwinds the query instead of hanging a
     ``recv``). The rendezvous: workers dial the advertised host:port,
     handshake rank/epoch (a per-query epoch rejects stale reconnects),
-    then frames flow until every worker reports done."""
+    then frames flow until every worker reports done.
+
+    The *runtime* lifecycle (listener, launched processes, connections,
+    router) is split from the *query* lifecycle: :meth:`open` binds the
+    listener, :meth:`run` executes one query, and :meth:`shutdown` tears
+    everything down. ``shutdown()`` is idempotent — every exit path
+    (clean completion, ABORT, rendezvous timeout, a raise mid-teardown)
+    funnels through it, so a double close can never leak the listener
+    socket or orphan a worker process. The persistent
+    :class:`~repro.service.service.QueryService` holds its own pool; this
+    runtime stays the one-shot per-query realization.
+
+    ``--serve`` workers (``socket_launch="connect"``) retain their shard
+    across reconnects: their HELLO announces what they hold (set name →
+    version, plus the rank/P they held it for), the rendezvous hands a
+    reconnecting worker its previous rank back when free, and SETUP then
+    ships a ``("held", version)`` manifest reference instead of the page
+    bytes — zero shard bytes on the wire for the warm path
+    (``setup_bytes`` counts what actually shipped)."""
 
     def __init__(self, P: int, launch: str, addr: Tuple[str, int],
                  accept_timeout: float):
@@ -456,10 +485,77 @@ class _SocketRuntime:
         self.launch = launch
         self.addr = addr
         self.accept_timeout = accept_timeout
+        # runtime state, torn down (once) by shutdown()
+        self._listener = None
+        self._conns: List = []
+        self._procs: List = []
+        self._worker_threads: List[threading.Thread] = []
+        self._router: Optional[_StarRouter] = None
+        self._closed = False
+        # shard page bytes actually shipped in SETUP frames this query —
+        # 0 when every external worker reconnected warm
+        self.setup_bytes = 0
 
+    # ------------------------------------------------- runtime lifecycle
+    def open(self) -> Tuple[str, int]:
+        """Bind + listen; returns the advertised (host, port)."""
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        try:
+            listener.bind(self.addr)
+            listener.listen(self.P + 2)
+        except BaseException:
+            listener.close()
+            raise
+        self._listener = listener
+        self._closed = False
+        host, port = listener.getsockname()[:2]
+        return ("127.0.0.1" if host in ("0.0.0.0", "") else host, port)
+
+    def shutdown(self) -> None:
+        """Tear the runtime down: stop the router's senders (queued ABORT
+        frames reach the kernel buffers before the FIN), close every
+        worker connection and the listener, reap launched processes and
+        threads. Safe to call any number of times — the first call wins,
+        later calls are no-ops (the ABORT path and the normal teardown
+        both land here without double-closing anything)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._router is not None:
+            self._router.stop_senders()
+            self._router.join_senders(10)
+        for c in self._conns:
+            if c is None:
+                continue
+            try:
+                c.close()
+            except OSError:  # pragma: no cover - already torn down
+                pass
+        self._conns = []
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+            self._listener = None
+        for p in self._procs:
+            p.join(timeout=30)
+            if p.is_alive():  # pragma: no cover - hung worker
+                p.terminate()
+        self._procs = []
+        for t in self._worker_threads:
+            t.join(timeout=10)
+        self._worker_threads = []
+        if self._router is not None:
+            self._router.join_pumps(5)
+            self._router = None
+
+    # ------------------------------------------------------------ query
     def run(self, prog: TCAPProgram, plan: PhysicalPlan,
             shards: List[PagedStore], vector_rows: int,
-            expr_backend: str = "numpy", trace: bool = False, rec=NULL
+            expr_backend: str = "numpy", trace: bool = False, rec=NULL,
+            set_versions: Optional[Dict[str, int]] = None
             ) -> Tuple[List[List], List[ExecStats], List[List]]:
         if self.launch == "connect":
             try:
@@ -472,112 +568,94 @@ class _SocketRuntime:
                     "(make_lambda) only exist in-process; express the "
                     "query in the lambda DSL, or run socket_launch='fork' "
                     "workers on the driver host") from e
-        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        try:
-            listener.bind(self.addr)
-            listener.listen(self.P + 2)
-        except BaseException:
-            listener.close()
-            raise
-        host, port = listener.getsockname()[:2]
-        advert = ("127.0.0.1" if host in ("0.0.0.0", "") else host, port)
+        self.setup_bytes = 0
+        versions = set_versions or {}
+        host, port = self.open()
+        advert = (host, port)
         epoch = os.urandom(8).hex()
 
-        def setup_for(rank: int) -> Dict:
-            sets = {name: (s.page_size, s.dtype,
-                           PageBlock(s.dtype.descr, s.to_payloads(), ()))
-                    for name, s in shards[rank].sets.items()}
+        def setup_for(rank: int, held: Dict[str, int]) -> Dict:
+            sets: Dict[str, Tuple] = {}
+            for name, s in shards[rank].sets.items():
+                ver = versions.get(name, 0)
+                if held.get(name) == ver:
+                    # the worker still holds this shard at this version
+                    # (and was handed the same rank back): a manifest
+                    # reference, zero page bytes on the wire
+                    sets[name] = ("held", ver)
+                else:
+                    block = PageBlock(s.dtype.descr, s.to_payloads(), ())
+                    self.setup_bytes += block.nbytes
+                    sets[name] = ("pages", s.page_size, s.dtype, block, ver)
             return {"prog": prog, "plan": plan_to_wire(prog, plan),
                     "vector_rows": vector_rows,
                     "expr_backend": expr_backend, "sets": sets,
                     "trace": trace}
 
-        procs: List = []
-        worker_threads: List[threading.Thread] = []
-        with rec.span("launch", cat="driver", kind=f"socket/{self.launch}"):
-            if self.launch == "fork":
-                import multiprocessing as mp
-                try:
-                    ctx = mp.get_context("fork")
-                except ValueError as e:  # pragma: no cover - non-fork
-                    raise RuntimeError(
-                        "socket_launch='fork' needs the fork start method "
-                        "(native lambdas in TCAP programs cannot be "
-                        "pickled; they ride the fork image) — use "
-                        "socket_launch='thread' here, or external workers "
-                        "via socket_launch='connect'") from e
-                for rank in range(self.P):
-                    p = ctx.Process(
-                        target=_socket_child,
-                        args=(rank, self.P, advert, epoch, shards[rank],
-                              vector_rows, prog, plan, expr_backend, trace),
-                        name=f"pc-worker-{rank}", daemon=True)
-                    procs.append(p)
-                    p.start()
-            elif self.launch == "thread":
-                for rank in range(self.P):
-                    t = threading.Thread(
-                        target=_socket_child,
-                        args=(rank, self.P, advert, epoch, shards[rank],
-                              vector_rows, prog, plan, expr_backend, trace),
-                        name=f"pc-worker-{rank}", daemon=True)
-                    worker_threads.append(t)
-                    t.start()
-            else:
-                print(f"driver: waiting for {self.P} workers at "
-                      f"{host}:{port} (python -m repro.dist.worker "
-                      f"--connect {host}:{port})",
-                      file=sys.stderr)
-
         try:
-            with rec.span("rendezvous", cat="driver", launch=self.launch):
-                conns = self._rendezvous(listener, epoch, setup_for)
-        except BaseException:
-            listener.close()
-            for p in procs:
-                p.terminate()
-            raise
-
-        with rec.span("route:start", cat="driver"):
-            router = _StarRouter(
-                self.P, read=lambda src: read_frame(conns[src]),
-                write=lambda dst, item: write_frame(conns[dst], item[0], dst,
-                                                    item[1], item[2]))
-            router.start()
-        try:
-            with rec.span("collect", cat="wait"):
-                col = router.collect_or_abort()
-        finally:
-            # ABORT frames (if any) were enqueued before stop, so joining
-            # the senders guarantees they reach the kernel send buffers
-            # before the connections close (close still delivers queued
-            # bytes before FIN)
-            with rec.span("teardown", cat="driver"):
-                router.stop_senders()
-                router.join_senders(10)
-                for c in conns:
+            with rec.span("launch", cat="driver",
+                          kind=f"socket/{self.launch}"):
+                if self.launch == "fork":
+                    import multiprocessing as mp
                     try:
-                        c.close()
-                    except OSError:  # pragma: no cover - already torn down
-                        pass
-                listener.close()
-                for p in procs:
-                    p.join(timeout=30)
-                    if p.is_alive():  # pragma: no cover - hung worker
-                        p.terminate()
-                for t in worker_threads:
-                    t.join(timeout=10)
-                router.join_pumps(5)
+                        ctx = mp.get_context("fork")
+                    except ValueError as e:  # pragma: no cover - non-fork
+                        raise RuntimeError(
+                            "socket_launch='fork' needs the fork start "
+                            "method (native lambdas in TCAP programs cannot "
+                            "be pickled; they ride the fork image) — use "
+                            "socket_launch='thread' here, or external "
+                            "workers via socket_launch='connect'") from e
+                    for rank in range(self.P):
+                        p = ctx.Process(
+                            target=_socket_child,
+                            args=(rank, self.P, advert, epoch, shards[rank],
+                                  vector_rows, prog, plan, expr_backend,
+                                  trace),
+                            name=f"pc-worker-{rank}", daemon=True)
+                        self._procs.append(p)
+                        p.start()
+                elif self.launch == "thread":
+                    for rank in range(self.P):
+                        t = threading.Thread(
+                            target=_socket_child,
+                            args=(rank, self.P, advert, epoch, shards[rank],
+                                  vector_rows, prog, plan, expr_backend,
+                                  trace),
+                            name=f"pc-worker-{rank}", daemon=True)
+                        self._worker_threads.append(t)
+                        t.start()
+                else:
+                    print(f"driver: waiting for {self.P} workers at "
+                          f"{host}:{port} (python -m repro.dist.worker "
+                          f"--connect {host}:{port})",
+                          file=sys.stderr)
+
+            with rec.span("rendezvous", cat="driver", launch=self.launch):
+                self._conns = self._rendezvous(self._listener, epoch,
+                                               setup_for)
+            conns = self._conns
+            with rec.span("route:start", cat="driver"):
+                self._router = _StarRouter(
+                    self.P, read=lambda src: read_frame(conns[src]),
+                    write=lambda dst, item: write_frame(
+                        conns[dst], item[0], dst, item[1], item[2]))
+                self._router.start()
+            with rec.span("collect", cat="wait"):
+                col = self._router.collect_or_abort()
+        finally:
+            with rec.span("teardown", cat="driver"):
+                self.shutdown()
         return col.present()
 
     def _rendezvous(self, listener, epoch: str, setup_for):
         """Accept until all P ranks joined (or the deadline passes):
         verify HELLO (protocol version; for driver-launched workers also
-        the per-query epoch and the pre-assigned rank — external workers
-        get the next free rank), reply WELCOME, and for external workers
-        ship the SETUP frame. Rogue or stale connections are dropped
-        without consuming a slot."""
+        the per-query epoch and the pre-assigned rank), reply WELCOME,
+        and for external workers ship the SETUP frame. External workers
+        get their previous rank back when it is free (so retained shards
+        stay valid — otherwise the next free rank, shipped cold). Rogue
+        or stale connections are dropped without consuming a slot."""
         conns: List = [None] * self.P
         deadline = time.monotonic() + self.accept_timeout
         pending = self.P
@@ -602,8 +680,17 @@ class _SocketRuntime:
                 if (tag != HELLO or not isinstance(hello, dict)
                         or hello.get("proto") != PROTO_VERSION):
                     raise ProtocolError("bad hello")
+                held: Dict[str, int] = {}
                 if self.launch == "connect":
                     rank = conns.index(None)
+                    prev = hello.get("prev") or {}
+                    pr = prev.get("rank")
+                    if (prev.get("P") == self.P and isinstance(pr, int)
+                            and 0 <= pr < self.P and conns[pr] is None):
+                        # same rank + same P: the retained shards are the
+                        # shards this query's placement gives that rank
+                        rank = pr
+                        held = hello.get("held") or {}
                 else:
                     if hello.get("epoch") != epoch:
                         raise ProtocolError("stale epoch")
@@ -619,7 +706,8 @@ class _SocketRuntime:
                 # shard / slow link gets the worker dropped mid-frame
                 c.settimeout(None)
                 if self.launch == "connect":
-                    write_frame(c, DRIVER, rank, SETUP, setup_for(rank))
+                    write_frame(c, DRIVER, rank, SETUP,
+                                setup_for(rank, held))
                 conns[rank] = c
                 pending -= 1
             except (ProtocolError, OSError):

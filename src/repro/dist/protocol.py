@@ -35,11 +35,11 @@ from repro.objectmodel.page import DEFAULT_PAGE_SIZE
 from repro.objectmodel.store import PagedSet
 from repro.objectmodel.vectorlist import VectorList
 
-__all__ = ["ABORT", "DRIVER", "HELLO", "WELCOME", "SETUP", "PROTO_VERSION",
-           "PageBlock", "PickleBlock", "ProtocolError", "StatsFrame",
-           "encode_batch", "decode_batch", "encode_agg_map",
+__all__ = ["ABORT", "DRIVER", "HELLO", "WELCOME", "SETUP", "QUERY", "BYE",
+           "PROTO_VERSION", "PageBlock", "PickleBlock", "ProtocolError",
+           "StatsFrame", "encode_batch", "decode_batch", "encode_agg_map",
            "decode_agg_map", "frame_buffers", "write_frame", "read_frame",
-           "decode_frame", "configure_socket"]
+           "decode_frame", "configure_socket", "mux_tag", "split_mux"]
 
 DRIVER = -1  # transport address of the driver
 ABORT = "__abort__"  # driver -> workers: a peer failed, stop waiting
@@ -49,7 +49,32 @@ ABORT = "__abort__"  # driver -> workers: a peer failed, stop waiting
 HELLO = "__hello__"      # worker -> driver: first frame on a connection
 WELCOME = "__welcome__"  # driver -> worker: rank/P/epoch assignment
 SETUP = "__setup__"      # driver -> external worker: program + shard pages
-PROTO_VERSION = 1
+QUERY = "__query__"      # service -> resident worker: one query's setup
+BYE = "__bye__"          # service -> resident worker: clean pool shutdown
+# v2: SETUP set entries are tagged ("pages", ...) | ("held", version) so a
+# reconnecting --serve worker that still holds a shard at the current
+# version is sent a manifest reference instead of the page bytes
+PROTO_VERSION = 2
+
+
+# ------------------------------------------------- query multiplexing
+# A resident service pool runs many queries concurrently over the same
+# worker connections. Every data/control tag of one query is prefixed by
+# that query's epoch id, so interleaved frames from different queries
+# demultiplex unambiguously at both ends ("|" cannot appear in the
+# exchange layer's "<op index>:<role>" tags or in epoch ids).
+MUX_SEP = "|"
+
+
+def mux_tag(qid: str, tag: str) -> str:
+    """Namespace ``tag`` under query epoch ``qid``."""
+    return f"{qid}{MUX_SEP}{tag}"
+
+
+def split_mux(tag: str) -> Tuple[Optional[str], str]:
+    """``(qid, bare tag)`` — qid is None for un-namespaced tags."""
+    qid, sep, rest = tag.partition(MUX_SEP)
+    return (qid, rest) if sep else (None, tag)
 
 
 class PageBlock:

@@ -46,7 +46,7 @@ from repro.objectmodel.store import PagedSet, PagedStore
 from repro.objectmodel.vectorlist import VectorList
 
 __all__ = ["WorkerRuntime", "worker_main", "connect_worker",
-           "run_remote_worker", "main"]
+           "build_setup_shard", "run_remote_worker", "main"]
 
 
 def _batch_rows(batches: List[VectorList]) -> int:
@@ -242,15 +242,17 @@ class WorkerRuntime:
 def worker_main(rank: int, num_workers: int, transport, shard: PagedStore,
                 vector_rows: int, prog: TCAPProgram,
                 plan: PhysicalPlan, expr_backend: str = "numpy",
-                trace: bool = False) -> bool:
+                trace: bool = False, runtime_cls=None) -> bool:
     """Entry point for every worker kind: run, then report stats (or the
     failure) to the driver. With ``trace=True`` the worker records its own
     rank-attributed spans and ships them back inside the ``done`` stats
-    frame. Returns whether the query completed here — False when it
-    aborted (a peer failed) or this worker errored, so process-worker
-    entry points can exit nonzero for supervisors."""
-    rt = WorkerRuntime(rank, num_workers, transport, shard, vector_rows,
-                       expr_backend)
+    frame. ``runtime_cls`` swaps the runtime (the service's resident
+    worker injects its write-materializing subclass). Returns whether the
+    query completed here — False when it aborted (a peer failed) or this
+    worker errored, so process-worker entry points can exit nonzero for
+    supervisors."""
+    rt = (runtime_cls or WorkerRuntime)(rank, num_workers, transport,
+                                        shard, vector_rows, expr_backend)
     rec = SpanRecorder(rank=rank) if trace else NULL
     try:
         with using(rec):
@@ -272,14 +274,17 @@ def worker_main(rank: int, num_workers: int, transport, shard: PagedStore,
 # ----------------------------------------------------- socket rendezvous
 def connect_worker(addr: Tuple[str, int], *, rank: Optional[int] = None,
                    epoch: Optional[str] = None, timeout: float = 30.0,
-                   retry_seconds: float = 0.0):
+                   retry_seconds: float = 0.0,
+                   hello_extra: Optional[Dict] = None):
     """Dial the driver's rendezvous at ``addr`` and handshake: send HELLO
     (protocol version + the launched worker's pre-assigned rank/epoch, or
     ``None`` for an external worker asking to be assigned one), expect
     WELCOME back. Returns ``(socket, welcome)`` with the socket blocking
     and Nagle disabled (exchange frames are latency-sensitive). With
     ``retry_seconds``, the initial TCP connect is retried until the window
-    closes — external workers may be started before the driver listens."""
+    closes — external workers may be started before the driver listens.
+    ``hello_extra`` rides along in the HELLO payload — ``--serve`` workers
+    announce the shards they retained (``held``/``prev``) through it."""
     deadline = time.monotonic() + retry_seconds
     while True:
         try:
@@ -291,9 +296,11 @@ def connect_worker(addr: Tuple[str, int], *, rank: Optional[int] = None,
             time.sleep(0.2)
     try:
         configure_socket(sock)
+        hello = {"proto": PROTO_VERSION, "rank": rank, "epoch": epoch}
+        if hello_extra:
+            hello.update(hello_extra)
         write_frame(sock, rank if rank is not None else DRIVER, DRIVER,
-                    HELLO, {"proto": PROTO_VERSION, "rank": rank,
-                            "epoch": epoch})
+                    HELLO, hello)
         frame = read_frame(sock)
         if frame is None:
             raise ProtocolError(
@@ -309,28 +316,98 @@ def connect_worker(addr: Tuple[str, int], *, rank: Optional[int] = None,
         raise
 
 
+def build_setup_shard(setup_sets: Dict,
+                      retained: Optional[Dict[str, Tuple[int, PagedSet]]]
+                      = None) -> PagedStore:
+    """Materialize one SETUP frame's ``sets`` into a shard store. Entries
+    are tagged (protocol v2): ``("pages", page_size, dtype, block, ver)``
+    adopts shipped page bytes verbatim; ``("held", ver)`` reuses the
+    retained :class:`PagedSet` from a previous connection at that version
+    (the driver only emits it after the HELLO announced we hold it).
+    With ``retained`` given, freshly shipped shards are recorded in it so
+    the next reconnect can announce them."""
+    shard = PagedStore()
+    for name, entry in setup_sets.items():
+        if entry[0] == "held":
+            if retained is None or name not in retained:
+                raise ProtocolError(
+                    f"driver sent a 'held' reference for {name!r} but this "
+                    "worker retains no such shard")
+            ver, s = retained[name]
+            if ver != entry[1]:
+                raise ProtocolError(
+                    f"'held' reference for {name!r} at version {entry[1]} "
+                    f"but the retained shard is version {ver}")
+            shard.sets[name] = s
+        else:
+            _, page_size, dtype, block, ver = entry
+            s = PagedSet.from_payloads(name, dtype, block.payloads,
+                                       page_size)
+            shard.sets[name] = s
+            if retained is not None:
+                retained[name] = (ver, s)
+    return shard
+
+
 def run_remote_worker(addr: Tuple[str, int], serve: bool = False,
                       retry_seconds: float = 30.0) -> Tuple[int, int]:
     """A worker on (potentially) another machine: connect to the driver's
     advertised ``host:port``, receive rank + the query setup (program,
     physical plan, this rank's shard pages — page bytes adopted verbatim),
     run it, report. One query per connection; with ``serve=True`` the
-    worker reconnects for subsequent queries until the driver goes away.
+    worker reconnects for subsequent queries until the driver goes away —
+    *retaining* its shard pages between connections and announcing them
+    (set name → version, plus the rank/P they were placed for) in the
+    HELLO, so a warm reconnect gets a ``("held", version)`` manifest
+    reference instead of the page bytes.
+
+    When the WELCOME says the far end is a persistent
+    :class:`~repro.service.service.QueryService` (``welcome["service"]``),
+    the connection is handed to the resident loop — many queries share
+    one connection, multiplexed by query id — and its counts are merged.
+
     Returns ``(completed, failed)`` query counts — failed covers queries
     that aborted (a peer died) or errored here, so the entry point can
     exit nonzero for supervisors."""
     queries = 0
     failed = 0
+    retained: Dict[str, Tuple[int, PagedSet]] = {}
+    prev: Optional[Dict] = None  # {"rank": r, "P": P} from the last query
+    # set after each served query: between queries the driver's
+    # per-query listener flaps, so a redial can be refused or cut
+    # mid-handshake (the dying listener's backlog is reset) just as the
+    # next query's listener opens — those must be retried, bounded by
+    # one retry window per gap. On the *first* dial (deadline unset) a
+    # refusal or drop is a verdict (driver absent / rendezvous full).
+    redial_deadline: Optional[float] = None
     while True:
+        extra = ({"held": {n: v for n, (v, _) in retained.items()},
+                  "prev": prev} if serve and prev is not None else None)
+        window = (retry_seconds if redial_deadline is None
+                  else redial_deadline - time.monotonic())
+        if window <= 0:
+            return queries, failed  # driver stayed gone; done serving
         try:
-            sock, welcome = connect_worker(addr, retry_seconds=retry_seconds)
+            sock, welcome = connect_worker(addr, retry_seconds=window,
+                                           hello_extra=extra)
         except (OSError, ProtocolError):
-            # connect refused (driver gone) or accepted-then-dropped
-            # without a WELCOME (rendezvous already full / tearing down)
-            if queries or failed:
-                return queries, failed  # done serving; driver went away
-            raise
+            if redial_deadline is None:
+                raise
+            time.sleep(0.2)
+            continue
+        redial_deadline = None
         rank, P = int(welcome["rank"]), int(welcome["P"])
+        if welcome.get("service"):
+            from repro.service.resident import serve_resident
+            q, f = serve_resident(sock, welcome)
+            queries += q
+            failed += f
+            if not serve:
+                return queries, failed
+            prev = None
+            retained.clear()
+            redial_deadline = time.monotonic() + retry_seconds
+            continue
         frame = read_frame(sock)
         if frame is None:
             sock.close()
@@ -342,10 +419,17 @@ def run_remote_worker(addr: Tuple[str, int], serve: bool = False,
             raise ProtocolError(f"expected {SETUP!r}, got {tag!r}")
         prog = setup["prog"]
         plan = plan_from_wire(prog, setup["plan"])
-        shard = PagedStore()
-        for name, (page_size, dtype, block) in setup["sets"].items():
-            shard.sets[name] = PagedSet.from_payloads(
-                name, dtype, block.payloads, page_size)
+        if not serve:
+            shard = build_setup_shard(setup["sets"])
+        else:
+            if prev is not None and (rank, P) != (prev["rank"], prev["P"]):
+                # assigned a different rank (or the pool was resized) —
+                # the retained shards are the wrong partition now; drop
+                # them (the driver knows: on a rank/P mismatch it never
+                # honors ``held`` and ships pages)
+                retained.clear()
+            shard = build_setup_shard(setup["sets"], retained)
+        prev = {"rank": rank, "P": P}
         tr = SocketTransport(rank, sock)
         ok = worker_main(rank, P, tr, shard, setup["vector_rows"], prog,
                          plan, setup["expr_backend"],
@@ -357,6 +441,7 @@ def run_remote_worker(addr: Tuple[str, int], serve: bool = False,
             failed += 1
         if not serve:
             return queries, failed
+        redial_deadline = time.monotonic() + retry_seconds
 
 
 def main(argv=None) -> int:

@@ -102,6 +102,19 @@ class PagedStore:
         # moves. Direct PagedSet.append_records calls bypass it; all engine
         # writes go through send_data.
         self.stats_version = 0
+        # per-set version counters (bumped with stats_version, but only
+        # for the set that actually changed) — the shard catalog and the
+        # warm `--serve` SETUP path key shard reuse on these, so a write
+        # to one set never invalidates every other set's resident shards.
+        self.set_versions: Dict[str, int] = {}
+
+    def set_version(self, name: str) -> int:
+        """The named set's change counter (0 if the set does not exist)."""
+        return self.set_versions.get(name, 0)
+
+    def _bump(self, name: str) -> None:
+        self.stats_version += 1
+        self.set_versions[name] = self.set_versions.get(name, 0) + 1
 
     def create_set(self, name: str, dtype: np.dtype,
                    page_size: Optional[int] = None) -> PagedSet:
@@ -109,7 +122,7 @@ class PagedStore:
             raise KeyError(f"set {name!r} exists")
         s = PagedSet(name, dtype, page_size or self.page_size)
         self.sets[name] = s
-        self.stats_version += 1
+        self._bump(name)
         return s
 
     def get_set(self, name: str) -> PagedSet:
@@ -121,7 +134,7 @@ class PagedStore:
         s = self.sets.get(name) or self.create_set(
             name, dtype if dtype is not None else records.dtype)
         s.append_records(records)
-        self.stats_version += 1
+        self._bump(name)
         return s
 
     # ------------------------------------------------------------- spill
@@ -157,5 +170,5 @@ class PagedStore:
             s.pages.append(Page.from_payload(i, raw, self.page_size))
             s.counts.append(cnt)
         self.sets[name] = s
-        self.stats_version += 1
+        self._bump(name)
         return s

@@ -25,6 +25,30 @@ shuffle.bytes.total       ctr    Session from per-query ExecStats
 exchanges.elided.total    ctr    Session from per-query ExecStats
 ========================  =====  =============================================
 
+The persistent query service (``repro.service``) adds:
+
+=============================  =====  ========================================
+name                           kind   incremented by
+=============================  =====  ========================================
+service.queries.total          ctr    QueryService per completed query
+service.queries.admitted.total ctr    AdmissionScheduler on admission
+service.queries.rejected.total ctr    AdmissionScheduler (never fits /
+                                      queue overflow)
+service.queries.queued.total   ctr    AdmissionScheduler on enqueue
+service.queries.timeout.total  ctr    scheduler + service on timeout
+service.setup.bytes.total      ctr    QueryService (shard bytes shipped;
+                                      0 for catalog-warm queries)
+service.workers.died.total     ctr    QueryService pump on worker death
+service.pool.workers           gauge  QueryService (connected ranks)
+catalog.shards.total           gauge  ShardCatalog (live rank holdings)
+catalog.hits.total             ctr    ShardCatalog per held-reference
+                                      SETUP entry (scan-in-place)
+=============================  =====  ========================================
+
+The admitted/rejected/queued counters and the catalog gauge/hits are the
+observable half of the admission feedback loop: ``explain(analyze=True)``
+on a service session appends them as a footer.
+
 Per-query ``ExecStats`` stay per-query (reset at query start); these are
 the cumulative totals that used to be unobtainable on a reused Session.
 """

@@ -5,6 +5,10 @@ Single source for the human-facing views of a run:
 * :func:`last_run_lines` — the ``== last run ... ==`` block ``explain()``
   appends (totals + the per-worker shuffle_bytes / exchanges_elided line
   with the transport named);
+* :func:`service_lines` — the ``== service ... ==`` footer a
+  ``backend='service'`` session appends: admission counters, catalog
+  occupancy/hits, and the shard bytes the last query shipped (0 on a
+  catalog-warm repeat);
 * :func:`render_analyze` — the ``explain(analyze=True)`` per-op table:
   wall ms / rows / bytes / % of query wall per TCAP op (workers backends
   fold the per-rank op spans: wall is the max across ranks — the critical
@@ -18,7 +22,7 @@ from typing import List, Optional
 
 from repro.obs.trace import QueryTrace, Span
 
-__all__ = ["last_run_lines", "render_analyze"]
+__all__ = ["last_run_lines", "render_analyze", "service_lines"]
 
 
 def last_run_lines(stats, worker_stats=None,
@@ -39,6 +43,34 @@ def last_run_lines(stats, worker_stats=None,
                  else f"page-serialized, transport={worker_kind}")
         lines.append("  per-worker shuffle_bytes/exchanges_elided "
                      f"({label}): {per}")
+    return lines
+
+
+def service_lines(service, last_setup_bytes: int = 0) -> List[str]:
+    """The service footer for a ``backend='service'`` session: admission
+    accounting from the process metrics, catalog occupancy, and the shard
+    bytes the last query actually shipped (the warm-path proof: 0 when
+    every scan resolved to a held shard)."""
+    if service is None:
+        return []
+    from repro.obs.metrics import METRICS
+
+    def ctr(name: str):
+        return METRICS.counter(name)
+
+    cat = service.catalog.snapshot()
+    lines = [
+        "== service: "
+        f"admitted={ctr('service.queries.admitted.total')}, "
+        f"rejected={ctr('service.queries.rejected.total')}, "
+        f"queued={ctr('service.queries.queued.total')}, "
+        f"timeouts={ctr('service.queries.timeout.total')} ==",
+        f"  catalog: shards={cat['holdings']}, "
+        f"hits={cat['hits']}, "
+        f"materialized={len(cat['materialized'])}",
+        f"  pool: workers={service.P}, launch={service.launch}, "
+        f"setup_bytes(last)={last_setup_bytes}",
+    ]
     return lines
 
 

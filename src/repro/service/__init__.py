@@ -1,0 +1,26 @@
+"""repro.service — the persistent query service (resident worker pool,
+shard catalog, concurrent multi-tenant scheduling).
+
+The one-shot distributed runtime (:mod:`repro.dist`) pays a rendezvous
+and a full shard SETUP per query. This package keeps the pool *resident*:
+
+* :class:`~repro.service.service.QueryService` — the long-lived driver;
+* :class:`~repro.service.catalog.ShardCatalog` — which rank holds which
+  persisted shard (repeat queries scan in place, zero re-ship);
+* :class:`~repro.service.scheduler.AdmissionScheduler` — K client
+  sessions interleave under a per-worker memory budget with a bounded
+  queue, timeouts, and named-run accounting;
+* :mod:`~repro.service.resident` — the worker-side resident loop that
+  multiplexes many queries over one connection.
+
+Attach a client with ``Session(backend="service", service=svc)`` or
+``Session.connect(svc)``.
+"""
+from repro.service.catalog import CatalogEntry, ShardCatalog, StubSet
+from repro.service.scheduler import (AdmissionScheduler, FootprintModel,
+                                     QueryRejected, QueryTimeout, RunRecord)
+from repro.service.service import QueryService, ServiceExecutor
+
+__all__ = ["AdmissionScheduler", "CatalogEntry", "FootprintModel",
+           "QueryRejected", "QueryService", "QueryTimeout", "RunRecord",
+           "ServiceExecutor", "ShardCatalog", "StubSet"]

@@ -399,3 +399,77 @@ def test_rendezvous_times_out_when_workers_never_come():
         ex.execute(ds.filter(lambda r: r.salary > 0)
                    .select(lambda r: r.salary)._build_sink())
     assert time.monotonic() - t0 < 10
+
+
+# ----------------------------------------------------- teardown contract
+def test_socket_runtime_shutdown_is_idempotent():
+    """``_SocketRuntime.shutdown()`` is reached from both the ABORT path
+    and the normal teardown — the second arrival must be a strict no-op
+    (no double-close, no re-join), including with a live worker
+    connection still open."""
+    from repro.dist.driver import _SocketRuntime
+    rt = _SocketRuntime(2, "thread", ("127.0.0.1", 0), 5.0)
+    host, port = rt.open()
+    c = socket.create_connection((host, port), timeout=10)
+    rt._conns = [c]
+    rt.shutdown()
+    assert rt._closed
+    assert rt._conns == [] and rt._listener is None
+    rt.shutdown()  # second (and third) call: nothing left to close
+    rt.shutdown()
+    assert rt._closed
+    # a fresh open() re-arms the runtime after a full teardown
+    rt.open()
+    assert not rt._closed
+    rt.shutdown()
+    rt.shutdown()
+
+
+@pytest.mark.slow
+def test_serve_reconnect_ships_zero_shard_bytes():
+    """Warm `--serve` reconnect: a worker that kept its shard (same set
+    version, same rank) must be handed a ``("held", version)`` manifest
+    reference — zero shard page bytes on the wire — and the repeat query
+    must stay byte-identical to the cold one and to the local backend."""
+    emps, _ = _data(800, seed=13)
+
+    def q(e):
+        return (e.filter(lambda r: r.salary > 500)
+                 .group_by("dept")
+                 .agg(total=agg.sum("salary"), n=agg.count()))
+
+    ls = Session(num_partitions=2)
+    local = q(ls.load("emps", emps, type_name="Emp")).collect()
+
+    port = _free_port()
+    ws = Session(backend="workers", num_workers=2, worker_kind="socket",
+                 socket_launch="connect", socket_addr=("127.0.0.1", port))
+    we = ws.load("emps", emps, type_name="Emp")
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ,
+           "PYTHONPATH": src_dir + os.pathsep
+           + os.environ.get("PYTHONPATH", "")}
+    workers = [subprocess.Popen(
+        [sys.executable, "-m", "repro.dist.worker",
+         "--connect", f"127.0.0.1:{port}", "--serve",
+         "--retry-seconds", "30"], env=env) for _ in range(2)]
+    try:
+        cold = q(we).collect()
+        assert ws.executor.last_setup_bytes > 0
+        warm = q(we).collect()
+        # the regression this pins down: reconnect used to re-ship the
+        # full shard; the manifest reference makes the repeat free
+        assert ws.executor.last_setup_bytes == 0
+        for res in (cold, warm):
+            assert set(res) == set(local)
+            for c in local:
+                assert np.asarray(res[c]).tobytes() \
+                    == np.asarray(local[c]).tobytes(), c
+        # appending invalidates: the next query must re-ship
+        ws.store.send_data(we._node.set_name, emps[:16])
+        q(we).collect()
+        assert ws.executor.last_setup_bytes > 0
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()

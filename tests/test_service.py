@@ -1,0 +1,488 @@
+"""The persistent query service: resident pool, shard catalog, admission.
+
+What PlinyCompute's long-lived deployment model requires of this repo:
+
+* **warm locality** — a repeat query over a persisted set must scan in
+  place on the pool (zero shard bytes in SETUP) and stay byte-identical
+  to ``backend="local"``;
+* **multi-tenancy** — K client sessions interleave on one pool, isolated
+  per query id, under FIFO-fair admission control with a per-worker
+  memory budget corrected by observed-bytes feedback;
+* **worker-side write()** — materialized sets live in the pool workers'
+  resident stores (catalog-registered), never round-tripping through the
+  driver;
+* **fault containment** — a dead pool worker evicts its catalog
+  holdings, fails in-flight queries with a named error, marks
+  worker-materialized sets lost, and is replaced; driver-backed sets
+  just re-ship.
+
+Everything here rides real localhost TCP (the pool is socket workers by
+construction), so the module carries the ``socket`` marker — the CI
+service job selects it with ``-m socket``. Subprocess-launched external
+``--serve`` workers are additionally ``slow``.
+"""
+import os
+import socket as socket_mod
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Session, agg, make_lambda
+from repro.obs.metrics import METRICS
+from repro.service import (AdmissionScheduler, FootprintModel,
+                           QueryRejected, QueryService, QueryTimeout)
+
+from test_dist import fork_available  # one definition per test package
+
+pytestmark = pytest.mark.socket
+
+EMP_DT = np.dtype([("ename", "S8"), ("dept", np.int64),
+                   ("salary", np.int64)])
+
+
+def _emps(n=700, seed=3):
+    rng = np.random.default_rng(seed)
+    emps = np.zeros(n, EMP_DT)
+    emps["ename"] = [f"e{i}".encode() for i in range(n)]
+    emps["dept"] = rng.integers(0, 5, n)
+    emps["salary"] = rng.integers(30_000, 120_000, n)
+    return emps
+
+
+def _chain(e):
+    """A shuffle-bearing chain every backend must agree on byte-for-byte."""
+    return (e.filter(lambda r: r.salary > 50_000)
+             .group_by("dept")
+             .agg(total=agg.sum("salary"), n=agg.count(),
+                  lo=agg.min("salary")))
+
+
+def _assert_bytes_equal(a, b):
+    assert set(a) == set(b)
+    for c in a:
+        x, y = np.asarray(a[c]), np.asarray(b[c])
+        assert x.dtype == y.dtype, c
+        assert x.tobytes() == y.tobytes(), c
+
+
+def _kill_conn(svc, rank):
+    """Kill one pool worker the way a dead peer looks from the service:
+    shutdown delivers FIN both ways, waking the pump's blocked recv (a
+    bare close() would not interrupt it)."""
+    svc._conns[rank].shutdown(socket_mod.SHUT_RDWR)
+
+
+@pytest.fixture()
+def pool():
+    with QueryService(num_workers=2, launch="thread") as svc:
+        svc.wait_ready(30)
+        yield svc
+
+
+# --------------------------------------------------- warm-path locality
+def test_cold_then_warm_byte_identical_to_local(pool):
+    """The tentpole acceptance: the first query over a persisted set
+    ships its shards (cold), the repeat scans in place (0 SETUP bytes),
+    and both are byte-identical to the local backend."""
+    emps = _emps()
+    local = Session(num_partitions=2)
+    expected = _chain(local.load("emps", emps, type_name="Emp")).collect()
+
+    sess = Session.connect(pool)
+    e = sess.load("emps", emps, type_name="Emp")
+    q = _chain(e)
+    cold = q.collect()
+    cold_bytes = sess.executor.last_setup_bytes
+    warm = q.collect()
+    warm_bytes = sess.executor.last_setup_bytes
+
+    assert cold_bytes > 0
+    assert warm_bytes == 0  # catalog hit on every rank: zero re-ship
+    _assert_bytes_equal(cold, expected)
+    _assert_bytes_equal(warm, expected)
+
+
+def test_catalog_hits_and_holdings_track_reuse(pool):
+    emps = _emps(300)
+    sess = Session.connect(pool)
+    e = sess.load("emps", emps, type_name="Emp")
+    q = e.select(lambda r: r.salary)
+    q.collect()
+    snap0 = pool.catalog.snapshot()
+    assert snap0["holdings"] > 0
+    hits0 = snap0["hits"]
+    q.collect()
+    assert pool.catalog.snapshot()["hits"] == hits0 + pool.P
+
+
+def test_write_invalidates_only_that_set(pool):
+    """Per-set versioning: appending to one set must not go cold on the
+    other — only the written set re-ships."""
+    sess = Session.connect(pool)
+    a = sess.load("a", _emps(200, seed=1), type_name="Emp")
+    b = sess.load("b", _emps(200, seed=2), type_name="Emp")
+    qa, qb = a.select(lambda r: r.salary), b.select(lambda r: r.salary)
+    qa.collect(), qb.collect()
+    qa.collect()
+    assert sess.executor.last_setup_bytes == 0  # both warm
+    # touch b's backing set: a must stay warm, b must re-ship
+    bname = b._node.set_name
+    pool.store.send_data(bname, _emps(10, seed=9))
+    qa.collect()
+    assert sess.executor.last_setup_bytes == 0
+    qb.collect()
+    assert sess.executor.last_setup_bytes > 0
+
+
+# ------------------------------------------------------- multi-tenancy
+def test_four_concurrent_sessions_on_two_worker_pool(pool):
+    """K=4 client sessions submit concurrently over the P=2 pool; every
+    session's result must match the local backend (per-query mux tags
+    keep interleaved frames isolated)."""
+    emps = _emps(600, seed=11)
+    local = Session(num_partitions=2)
+    expected = _chain(local.load("emps", emps, type_name="Emp")).collect()
+
+    results, errors = {}, []
+    barrier = threading.Barrier(4)
+
+    def client(k):
+        try:
+            sess = Session.connect(pool)
+            e = sess.load(f"emps{k}", emps, type_name="Emp")
+            barrier.wait(timeout=30)
+            for _ in range(2):  # cold then warm, under contention
+                results[k] = _chain(e).collect()
+        except Exception as ex:  # noqa: BLE001 - surfaced below
+            errors.append((k, ex))
+
+    threads = [threading.Thread(target=client, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert sorted(results) == [0, 1, 2, 3]
+    for k in results:
+        _assert_bytes_equal(results[k], expected)
+    assert pool.queries_run >= 8
+    assert pool.scheduler.load()["running"] == 0
+
+
+def test_sessions_share_service_store(pool):
+    s1, s2 = Session.connect(pool), Session.connect(pool)
+    assert s1.store is pool.store and s2.store is pool.store
+    # a conflicting explicit store is refused up front
+    from repro.objectmodel.store import PagedStore
+    with pytest.raises(ValueError, match="share the QueryService's store"):
+        Session(backend="service", service=pool, store=PagedStore())
+
+
+# --------------------------------------------------- worker-side write()
+def test_write_materializes_on_workers_not_driver(pool):
+    emps = _emps(500, seed=5)
+    sess = Session.connect(pool)
+    e = sess.load("emps", emps, type_name="Emp")
+    out = (e.filter(lambda r: r.salary > 60_000)
+            .select(lambda r: r.salary).write("svc_rich"))
+    res = out.collect()
+    assert res == {}  # no output pages crossed the wire
+
+    ment = pool.catalog.materialized("svc_rich")
+    assert ment is not None and not ment.lost
+    stored = pool.store.sets["svc_rich"]
+    assert stored.num_records == ment.total_rows
+    assert not stored.pages  # a planning stub: data lives on the pool
+
+    # read it back: scans in place (held shards — zero setup bytes)
+    field = ment.dtype.names[0]
+    back = (sess.read("svc_rich")
+                .select(lambda r: getattr(r, field)).collect())
+    assert sess.executor.last_setup_bytes == 0
+    local = Session(num_partitions=2)
+    expected = (local.load("emps", emps, type_name="Emp")
+                     .filter(lambda r: r.salary > 60_000)
+                     .select(lambda r: r.salary).collect())
+    got, want = next(iter(back.values())), next(iter(expected.values()))
+    assert ment.total_rows == len(want)
+    # worker-side pagination differs from the driver's single-store
+    # order, so compare as multisets
+    assert np.array_equal(np.sort(got), np.sort(want))
+
+
+def test_write_of_empty_result_fails_cleanly(pool):
+    sess = Session.connect(pool)
+    e = sess.load("emps", _emps(50), type_name="Emp")
+    bad = (e.filter(lambda r: r.salary > 10_000_000)
+            .select(lambda r: r.salary).write("svc_empty"))
+    with pytest.raises(ValueError, match="no rows on any worker"):
+        bad.collect()
+
+
+# ---------------------------------------------------- admission control
+def test_admission_rejects_query_that_never_fits():
+    with QueryService(num_workers=2, launch="thread",
+                      worker_budget_bytes=64) as svc:
+        svc.wait_ready(30)
+        sess = Session.connect(svc)
+        e = sess.load("emps", _emps(400), type_name="Emp")
+        with pytest.raises(QueryRejected, match="never be admitted"):
+            e.select(lambda r: r.salary).collect()
+        assert svc.scheduler.load() == {"running": 0, "queued": 0,
+                                        "reserved_bytes": 0}
+
+
+def test_scheduler_fifo_fairness_and_timeout():
+    sched = AdmissionScheduler(worker_budget_bytes=100, max_concurrent=4)
+    sched.admit("big", 90)
+    t0 = time.monotonic()
+    with pytest.raises(QueryTimeout, match="not admitted"):
+        sched.admit("waiter", 50, timeout=0.3)
+    assert 0.2 < time.monotonic() - t0 < 5
+    sched.release("big")
+    rec = sched.admit("now-fits", 50, timeout=1.0)
+    assert rec.status == "running"
+    sched.release("now-fits", observed_bytes=10.0, wall_ms=1.0)
+    statuses = {r["qid"]: r["status"] for r in sched.accounting()}
+    assert statuses["now-fits"] == "ok"
+
+
+def test_scheduler_queue_overflow_rejects():
+    sched = AdmissionScheduler(max_concurrent=1, max_queue=1)
+    sched.admit("running", 1)
+    done = threading.Event()
+
+    def waiter():
+        try:
+            sched.admit("queued", 1, timeout=10)
+            sched.release("queued")
+        finally:
+            done.set()
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    for _ in range(100):  # wait for the waiter to actually enqueue
+        if sched.load()["queued"] == 1:
+            break
+        time.sleep(0.01)
+    with pytest.raises(QueryRejected, match="queue is full"):
+        sched.admit("overflow", 1, timeout=0.1)
+    sched.release("running")
+    assert done.wait(timeout=10)
+    t.join(timeout=10)
+
+
+def test_footprint_model_ewma_correction():
+    m = FootprintModel(alpha=0.5)
+    assert m.corrected("k", 1000.0) == 1000.0  # no feedback yet
+    m.observe("k", 1000.0, 2000.0)  # ran 2x the estimate
+    assert m.corrected("k", 1000.0) == pytest.approx(2000.0)
+    m.observe("k", 1000.0, 1000.0)  # EWMA pulls halfway back
+    assert m.corrected("k", 1000.0) == pytest.approx(1500.0)
+
+
+def test_footprint_estimate_scales_with_data():
+    from repro.analysis.footprint import estimate_plan_footprint
+    sess = Session(num_partitions=2)
+    small = sess.load("small", _emps(100), type_name="Emp")
+    big = sess.load("big", _emps(1000), type_name="Emp")
+    ps = sess._compile(small.select(lambda r: r.salary))
+    pb = sess._compile(big.select(lambda r: r.salary))
+    fs = estimate_plan_footprint(ps, sess.store, num_partitions=2)
+    fb = estimate_plan_footprint(pb, sess.store, num_partitions=2)
+    assert fs.total_bytes > 0 and fs.scan_bytes > 0
+    assert fb.scan_bytes > fs.scan_bytes  # 10x the rows: bigger estimate
+    assert fb.total_bytes > fs.total_bytes
+    assert fs.per_worker_bytes <= fs.total_bytes
+
+
+# ------------------------------------------------------ fault handling
+def test_worker_death_evicts_catalog_and_replaces_worker(pool):
+    emps = _emps(500)
+    sess = Session.connect(pool)
+    e = sess.load("emps", emps, type_name="Emp")
+    q = e.select(lambda r: r.salary)
+    expected = q.collect()
+    e.select(lambda r: r.dept).write("svc_mat").collect()
+    assert not pool.catalog.materialized("svc_mat").lost
+
+    died0 = METRICS.counter("service.workers.died.total")
+    _kill_conn(pool, 0)
+    deadline = time.monotonic() + 15
+    while time.monotonic() < deadline:
+        if pool.catalog.materialized("svc_mat").lost:
+            break
+        time.sleep(0.05)
+    assert pool.catalog.materialized("svc_mat").lost
+    assert pool.catalog.lookup(0, e._node.set_name) is None
+    assert METRICS.counter("service.workers.died.total") > died0
+
+    # the pool self-heals (thread launch relaunches) and driver-backed
+    # sets simply re-ship the dead rank's partition
+    pool.wait_ready(30)
+    again = q.collect()
+    _assert_bytes_equal(again, expected)
+
+    # the worker-materialized set is gone with its rank: named error
+    field = pool.catalog.materialized("svc_mat").dtype.names[0]
+    with pytest.raises(RuntimeError, match="lost"):
+        (sess.read("svc_mat")
+             .select(lambda r: getattr(r, field)).collect())
+
+
+def test_worker_death_errors_only_inflight_queries(pool):
+    """A death must fail queries that were in flight — with a named
+    error — and leave later queries to run on the healed pool."""
+    import queue as queue_mod
+    collector = queue_mod.SimpleQueue()
+    pool._collectors["inflight"] = collector
+    try:
+        _kill_conn(pool, 1)
+        src, tag, msg = collector.get(timeout=15)
+        assert tag == "error"
+        assert "rank 1 died" in msg
+    finally:
+        pool._collectors.pop("inflight", None)
+    pool.wait_ready(30)
+    sess = Session.connect(pool)
+    e = sess.load("emps", _emps(200), type_name="Emp")
+    assert len(next(iter(e.select(lambda r: r.salary)
+                          .collect().values()))) == 200
+
+
+# ------------------------------------------------- config + capability
+def test_service_backend_validation():
+    with pytest.raises(ValueError, match="pass service="):
+        Session(backend="service")
+    svc = QueryService(num_workers=2)  # not started: config-only checks
+    with pytest.raises(ValueError, match="pool size is fixed"):
+        Session(backend="service", service=svc, num_workers=4)
+    with pytest.raises(ValueError, match="worker_kind is fixed"):
+        Session(backend="service", service=svc, worker_kind="thread")
+    with pytest.raises(ValueError, match="fixed by the QueryService"):
+        Session(backend="service", service=svc, socket_launch="fork")
+    with pytest.raises(ValueError, match="only applies to"):
+        Session(backend="local", service=svc)
+    with pytest.raises(ValueError, match="unknown service launch"):
+        QueryService(num_workers=2, launch="carrier-pigeon")
+    with pytest.raises(ValueError, match="cannot run expr_backend='jax'"):
+        QueryService(num_workers=2, launch="fork", expr_backend="jax")
+
+
+def test_service_refuses_native_lambdas_for_every_launch(pool):
+    """PL301 extends to the service: the pool outlives any one query, so
+    no launch mode can carry a native lambda in a fork image — the plan
+    is refused before admission."""
+    sess = Session.connect(pool)
+    e = sess.load("emps", _emps(50), type_name="Emp")
+    bad = e.select(lambda r: make_lambda(r, lambda rows: rows["salary"],
+                                         "x"))
+    with pytest.raises(ValueError, match="native"):
+        bad.collect()
+
+
+def test_submit_requires_started_service():
+    svc = QueryService(num_workers=2)
+    sess = Session.connect(svc)
+    e = sess.load("emps", _emps(20), type_name="Emp")
+    with pytest.raises(RuntimeError, match="not running"):
+        e.select(lambda r: r.salary).collect()
+
+
+def test_stop_is_idempotent_and_kills_pool():
+    svc = QueryService(num_workers=2, launch="thread").start()
+    svc.wait_ready(30)
+    threads = list(svc._threads)
+    svc.stop()
+    svc.stop()  # second call must be a no-op, not a double-close
+    for t in threads:
+        t.join(timeout=10)
+        assert not t.is_alive()
+    assert all(c is None for c in svc._conns)
+
+
+# ------------------------------------------------------- observability
+def test_explain_shows_service_footer_and_metrics(pool):
+    sess = Session.connect(pool)
+    e = sess.load("emps", _emps(200), type_name="Emp")
+    q = e.select(lambda r: r.salary)
+    q.collect()
+    q.collect()
+    text = q.explain()
+    assert "service pool x2 via thread" in text
+    assert "== service:" in text
+    assert "catalog: shards=" in text
+    assert "setup_bytes(last)=0" in text
+    snap = METRICS.snapshot()
+    for name in ("service.queries.total", "service.queries.admitted.total",
+                 "catalog.hits.total"):
+        assert snap["counters"].get(name, 0) > 0, name
+    assert snap["gauges"].get("service.pool.workers") == 2
+    assert snap["gauges"].get("catalog.shards.total", 0) > 0
+
+
+def test_accounting_records_named_runs(pool):
+    sess = Session.connect(pool)
+    e = sess.load("emps", _emps(100), type_name="Emp")
+    e.select(lambda r: r.salary).collect()
+    runs = pool.scheduler.accounting()
+    assert runs and runs[-1]["status"] == "ok"
+    assert runs[-1]["predicted_bytes"] > 0
+    assert runs[-1]["observed_bytes"] is not None
+
+
+# ------------------------------------------- other pool launch modes
+@pytest.mark.slow
+def test_fork_launch_byte_identical():
+    if not fork_available():
+        pytest.skip("fork start method unavailable")
+    emps = _emps(400, seed=7)
+    local = Session(num_partitions=2)
+    expected = _chain(local.load("emps", emps, type_name="Emp")).collect()
+    with QueryService(num_workers=2, launch="fork") as svc:
+        svc.wait_ready(30)
+        sess = Session.connect(svc)
+        q = _chain(sess.load("emps", emps, type_name="Emp"))
+        _assert_bytes_equal(q.collect(), expected)
+        assert sess.executor.last_setup_bytes > 0
+        _assert_bytes_equal(q.collect(), expected)
+        assert sess.executor.last_setup_bytes == 0
+
+
+@pytest.mark.slow
+def test_connect_launch_external_serve_workers():
+    """External ``python -m repro.dist.worker --connect ... --serve``
+    processes join the pool; the WELCOME tells them they joined a
+    service and they switch to the resident loop."""
+    emps = _emps(400, seed=9)
+    local = Session(num_partitions=2)
+    expected = _chain(local.load("emps", emps, type_name="Emp")).collect()
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ,
+           "PYTHONPATH": src_dir + os.pathsep
+           + os.environ.get("PYTHONPATH", "")}
+    with QueryService(num_workers=2, launch="connect") as svc:
+        host, port = svc.advertised
+        workers = [subprocess.Popen(
+            [sys.executable, "-m", "repro.dist.worker",
+             "--connect", f"{host}:{port}", "--serve",
+             "--retry-seconds", "2"], env=env) for _ in range(2)]
+        try:
+            svc.wait_ready(60)
+            sess = Session.connect(svc)
+            q = _chain(sess.load("emps", emps, type_name="Emp"))
+            _assert_bytes_equal(q.collect(), expected)
+            assert sess.executor.last_setup_bytes > 0
+            _assert_bytes_equal(q.collect(), expected)
+            assert sess.executor.last_setup_bytes == 0
+            svc.stop()  # BYE: workers exit cleanly (0 = served OK)
+            for p in workers:
+                assert p.wait(timeout=60) == 0
+        finally:
+            for p in workers:
+                if p.poll() is None:
+                    p.kill()

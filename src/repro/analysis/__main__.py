@@ -8,11 +8,20 @@ Eager app paths (the linalg DSL, TPC-H top-k) additionally *execute*,
 which routes every plan through the Session's analyzer gate — a gated
 plan failing would surface here as the ValueError the gate raises.
 
+``--json`` emits a machine-readable report instead (schema
+``repro-planlint/1``: per plan the findings as ``{code, severity,
+op_path, message}``, the inferred output schema, and the elided-exchange
+op indices); the human progress lines move to stderr and the
+exit-1-on-errors contract is unchanged.
+
 CI runs this as the planlint job: the apps must stay analysis-clean at
 error severity.
 """
 from __future__ import annotations
 
+import argparse
+import contextlib
+import json
 import sys
 
 import numpy as np
@@ -112,15 +121,36 @@ def _check_linalg(reports: list) -> None:
     mm.collect()
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable JSON report on stdout "
+                         "(progress lines go to stderr)")
+    args = ap.parse_args(argv)
+
     reports: list = []
-    for check in (_check_tpch, _check_ml, _check_linalg):
-        check(reports)
-    n_err = sum(len(rep.errors()) for _, rep in reports)
-    n_warn = sum(len(rep.warnings()) for _, rep in reports)
-    n_info = sum(len(rep.infos()) for _, rep in reports)
-    print(f"== planlint: {len(reports)} plans analyzed, {n_err} errors, "
-          f"{n_warn} warnings, {n_info} infos ==")
+    with contextlib.ExitStack() as stack:
+        if args.json:
+            # keep stdout pure JSON for tools; the human run log (the
+            # checks print as they execute) still lands on stderr
+            stack.enter_context(contextlib.redirect_stdout(sys.stderr))
+        for check in (_check_tpch, _check_ml, _check_linalg):
+            check(reports)
+        n_err = sum(len(rep.errors()) for _, rep in reports)
+        n_warn = sum(len(rep.warnings()) for _, rep in reports)
+        n_info = sum(len(rep.infos()) for _, rep in reports)
+        print(f"== planlint: {len(reports)} plans analyzed, {n_err} errors, "
+              f"{n_warn} warnings, {n_info} infos ==")
+    if args.json:
+        doc = {"schema": "repro-planlint/1",
+               "plans": [{"name": name, **rep.to_json_dict()}
+                         for name, rep in reports],
+               "counts": {"error": n_err, "warning": n_warn,
+                          "info": n_info}}
+        json.dump(doc, sys.stdout, indent=1)
+        print()
     if n_err:
         for name, rep in reports:
             for d in rep.errors():

@@ -66,34 +66,79 @@ def _fusion_diagnostics(prog: TCAPProgram, edge_dtypes,
         in_dts = [edge_dtypes.get((step.in_list, c)) for c in ir.in_cols]
         if any(d is None for d in in_dts):
             continue  # inference gave up upstream; nothing sound to say
-        status, _ = schedule_jax_run(
-            ir, [np.zeros(0, d) for d in in_dts])
-        n_core = sum(1 for ins in ir.instrs if status[ins.out] == "jit")
-        n_post = sum(1 for ins in ir.instrs if status[ins.out] == "post")
+        arrays = [np.zeros(0, d) for d in in_dts]
+        # the raw schedule names the finding; the hoisted schedule (what
+        # _compile_jax actually builds) shows the action taken on it
+        raw, _ = schedule_jax_run(ir, arrays, hoist_host=False)
+        n_core = sum(1 for ins in ir.instrs if raw[ins.out] == "jit")
+        n_post = sum(1 for ins in ir.instrs if raw[ins.out] == "post")
         if n_core and n_post:
             kinds = sorted({ins.kind for ins in ir.instrs
-                            if status[ins.out] == "post"})
+                            if raw[ins.out] == "post"})
+            hoisted, _ = schedule_jax_run(ir, arrays, hoist_host=True)
+            n_demoted = sum(1 for ins in ir.instrs
+                            if raw[ins.out] == "jit"
+                            and hoisted[ins.out] != "jit")
             diags.append(Diagnostic(
                 "PL402", "info",
                 f"host-device round-trip: {n_post} instruction(s) "
-                f"({', '.join(kinds)}) return to the host after the jitted "
-                f"core of this fused run — non-jaxable dtypes or host-only "
-                "stages downstream of device values",
+                f"({', '.join(kinds)}) would return to the host after the "
+                "jitted core of this fused run (non-jaxable dtypes or "
+                "host-only stages downstream of device values) — the "
+                "scheduler reorders them ahead of the core, demoting "
+                f"{n_demoted} numeric instruction(s) to the host prologue "
+                "for a single device crossing",
                 op_path(first, prog.ops[first])))
+    return diags
+
+
+def _join_advisories(prog: TCAPProgram, store, plan,
+                     broadcast_threshold: int,
+                     num_partitions: Optional[int]) -> List[Diagnostic]:
+    """Pass 5 — PL203: cross-check the plan's broadcast-vs-hash choice
+    against the width-aware byte model (inferred per-column itemsize ×
+    catalog cardinality). The planner's trace carries the scanned record
+    itemsize through projections and aggregations, so a narrowed build
+    side can look big to it; where the two models disagree, advise."""
+    from repro.analysis.footprint import modeled_join_algo
+    if plan is None or store is None:
+        return []
+    if not any(op.op == "JOIN" for op in prog.ops):
+        return []  # the width model re-walks inference; skip join-free plans
+    advised = modeled_join_algo(prog, store, broadcast_threshold,
+                                num_partitions)
+    diags: List[Diagnostic] = []
+    for i, op in enumerate(prog.ops):
+        if op.op != "JOIN" or i not in advised:
+            continue
+        chosen = plan.join_algo.get(id(op), "hash_partition")
+        if advised[i] != chosen:
+            diags.append(Diagnostic(
+                "PL203", "info",
+                f"join algorithm disagreement: the plan chose {chosen} "
+                f"but modeled bytes (inferred itemsize x cardinality) "
+                f"favor {advised[i]} — plan_physical(advise_joins=True) "
+                "or Session(advise_joins=True) adopts the modeled choice",
+                op_path(i, op)))
     return diags
 
 
 def analyze(prog: TCAPProgram, store=None, plan=None,
             config: Optional[BuildConfig] = None,
-            expr_backend: Optional[str] = None) -> AnalysisReport:
+            expr_backend: Optional[str] = None,
+            broadcast_threshold: int = 2 << 30,
+            num_partitions: Optional[int] = None) -> AnalysisReport:
     """Run schema/dtype dataflow, partitioning propagation, and the
-    capability + fusion rules over one (optimized) TCAP program.
+    capability + fusion + join-advisory rules over one (optimized) TCAP
+    program.
 
     ``store`` resolves SCAN dtypes for untyped sets; ``plan`` (a
     :class:`~repro.core.physical.PhysicalPlan`) feeds the partitioning
     pass the join-algorithm decisions; ``config`` enables the build-config
-    capability rules. All three are optional — passes degrade
-    conservatively without them."""
+    capability rules; ``broadcast_threshold``/``num_partitions`` let the
+    PL203 cross-check price joins under the session's actual planner
+    inputs. All are optional — passes degrade conservatively without
+    them."""
     if expr_backend is None:
         expr_backend = config.expr_backend if config is not None else "numpy"
     diags, edge_dtypes, output_schema = schema_pass(prog, store)
@@ -101,14 +146,18 @@ def analyze(prog: TCAPProgram, store=None, plan=None,
     diags = list(diags) + list(part.diagnostics)
     diags += capability_diagnostics(prog, config)
     diags += _fusion_diagnostics(prog, edge_dtypes, expr_backend)
+    diags += _join_advisories(prog, store, plan, broadcast_threshold,
+                              num_partitions)
     order = {"error": 0, "warning": 1, "info": 2}
     diags.sort(key=lambda d: (order[d.severity], d.op_path, d.code))
-    # PL201 states the *finding* (the exchange is provably redundant) and
-    # stays either way; elided_exchanges states the *action* — what this
-    # plan will actually skip (empty when the session disables elision)
-    elided = part.redundant
+    # PL201/PL202 state the *finding* (the exchange is provably redundant)
+    # and stay either way; elided_exchanges states the *action* — the op
+    # indices whose exchange this plan will actually skip (empty when the
+    # session disables elision)
+    elided = tuple(sorted(set(part.redundant) | set(part.join_elide)))
     if plan is not None:
         elided = tuple(i for i, op in enumerate(prog.ops)
-                       if id(op) in plan.agg_elide)
+                       if id(op) in plan.agg_elide
+                       or id(op) in plan.join_elide)
     return AnalysisReport(diagnostics=diags, output_schema=output_schema,
                           elided_exchanges=elided)

@@ -15,16 +15,28 @@ PL102   warning   accumulator saturation: ``sum`` over a small integer
                   overflow silently)
 PL103   error     unresolved column: ``attAccess`` of a field the
                   inferred input record dtype does not define
+PL104   warning   float group key: grouping on a float-dtype key —
+                  ``NaN != NaN``, so NaN keys silently fragment into
+                  one group per row
 PL201   info      redundant exchange: a planned AGG shuffle whose input
                   is already hash-partitioned on the same key tuple by
                   ``stable_key_hash`` (the optimizer elides it)
+PL202   info      co-partitioned join: a hash-partition JOIN side
+                  already hash-partitioned on its join key — the side's
+                  split+route exchange is the identity permutation (the
+                  optimizer elides it)
+PL203   info      join algorithm disagreement: the planner's broadcast-
+                  vs-hash choice differs from the width-aware byte
+                  model (``advise_joins=True`` adopts the modeled
+                  choice)
 PL301   error     native lambda on a connect-mode plan: the program
                   cannot be pickled to external workers
 PL401   info      fusion barrier: an op the stage compiler cannot fuse
                   splits a pipelined run (native lambdas, FLATTEN)
-PL402   info      host↔device round-trip: instructions scheduled back
-                  on the host *after* a jitted core within one fused
-                  run (jax backend)
+PL402   info      host↔device round-trip: instructions that would
+                  return to the host *after* a jitted core within one
+                  fused run (jax backend) — the scheduler hoists them
+                  ahead of the core
 ======  ========  =====================================================
 
 Severities: ``error`` diagnostics make :meth:`AnalysisReport.errors`
@@ -77,6 +89,7 @@ class AnalysisReport:
     diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
     output_schema: Dict[str, Optional[np.dtype]] = \
         dataclasses.field(default_factory=dict)
+    # op indices (AGG and JOIN) whose exchange the plan actually skips
     elided_exchanges: Tuple[int, ...] = ()
 
     def errors(self) -> List[Diagnostic]:
@@ -100,3 +113,18 @@ class AnalysisReport:
                 for c, dt in self.output_schema.items())
             lines.append(f"== inferred output schema: {cols} ==")
         return "\n".join(lines)
+
+    def to_json_dict(self) -> Dict:
+        """A machine-readable view (``python -m repro.analysis --json``):
+        plain strings/ints only, so it serializes with ``json.dump``."""
+        return {
+            "findings": [{"code": d.code, "severity": d.severity,
+                          "op_path": d.op_path, "message": d.message}
+                         for d in self.diagnostics],
+            "output_schema": {c: (str(dt) if dt is not None else None)
+                              for c, dt in self.output_schema.items()},
+            "elided_exchanges": list(self.elided_exchanges),
+            "counts": {"error": len(self.errors()),
+                       "warning": len(self.warnings()),
+                       "info": len(self.infos())},
+        }

@@ -261,6 +261,17 @@ def _schema_pass_loop(prog, store, diags, dt, tainted, consty,
                         f"in {sum_acc_dtype(d)} — large partitions can "
                         "overflow silently; widen the value to int64 first",
                         op_path(i, op)))
+            for kname, kcol in zip(spec.key_names, spec.key_cols(op)):
+                kd = dt.get((op.in_list, kcol))
+                if (kd is not None and kd.kind == "f"
+                        and (op.in_list, kcol) not in tainted):
+                    diags.append(Diagnostic(
+                        "PL104", "warning",
+                        f"float group key {kname!r} ({kd}): NaN != NaN, so "
+                        "NaN keys silently fragment into one group per "
+                        "row — round or cast the key to an integer/bytes "
+                        "dtype if NaNs can occur",
+                        op_path(i, op)))
             for name, d in _agg_dtypes(op, spec, dt).items():
                 dt[(op.out, name)] = d
                 if acc_taint:

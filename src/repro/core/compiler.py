@@ -102,7 +102,8 @@ class _Emitter:
         new_col = stage
         out_list = self.namer.vlist("W")
         info = {"type": term.kind}
-        for k in ("attName", "methodName", "op", "onType", "name"):
+        for k in ("attName", "methodName", "op", "onType", "name",
+                  "pair_fields"):
             if k in term.info:
                 info[k] = term.info[k]
         if term.kind == "native":

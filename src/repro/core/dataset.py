@@ -327,8 +327,16 @@ class Dataset:
                     "explicit project=")
             pack, pair = _pair_projection(*schemas)
             name = f"pack{pair.type_name}"
-            project = (lambda a, b, _fn=pack, _nm=name:
-                       make_lambda([a, b], _fn, _nm))
+            moves = pair_field_map(*schemas)
+
+            def project(a, b, _fn=pack, _nm=name, _mv=moves):
+                term = make_lambda([a, b], _fn, _nm)
+                # provenance for planlint: which (side, src) record field
+                # each output field copies — lets the partitioning pass
+                # resolve attAccess on the pair back through the join, so
+                # a JOIN->AGG chain on the join key elides its exchange
+                term.info["pair_fields"] = _mv
+                return term
         else:
             _validate_spec(project, schemas)
         return self._derive(_Join(self._node, other._node, on, project,

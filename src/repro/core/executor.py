@@ -26,7 +26,7 @@ paper-claims validation benchmarks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -155,7 +155,8 @@ class Executor:
                     elif op.op == "JOIN":
                         data[op.out] = self._join(
                             op, i, data[op.in_list], data[op.in_list2],
-                            plan.join_algo.get(id(op), "hash_partition"))
+                            plan.join_algo.get(id(op), "hash_partition"),
+                            elide=plan.join_elide.get(id(op), ()))
                     elif op.op == "AGG":
                         data[op.out] = self._aggregate(
                             op, i, data[op.in_list],
@@ -194,8 +195,13 @@ class Executor:
         return [[fn(vl) for vl in batches] for batches in parts]
 
     # ------------------------------------------------------------- join
-    def _join(self, op: TCAPOp, i: int, left, right, algo: str
-              ) -> List[List[VectorList]]:
+    def _join(self, op: TCAPOp, i: int, left, right, algo: str,
+              elide: Tuple[str, ...] = ()) -> List[List[VectorList]]:
+        """``elide`` names the hash-join sides ("L"/"R") the plan proved
+        already hash-partitioned on their join key (PL202): those concat
+        in place — byte-identical to shuffling, since the shuffle of a
+        correctly-placed side is the identity permutation — and count as
+        elided exchanges instead of shuffle bytes."""
         if algo == "broadcast":
             self.stats.broadcast_joins += 1
             sb0 = self.stats.shuffle_bytes
@@ -209,8 +215,16 @@ class Executor:
             lparts = [concat_batches(p) for p in left]
         else:
             self.stats.hash_partition_joins += 1
-            lparts = self._shuffle(left, op.apply_cols[0], f"{i}:L")
-            rparts = self._shuffle(right, op.apply_cols2[0], f"{i}:R")
+            if "L" in elide:
+                self.stats.exchanges_elided += 1
+                lparts = [concat_batches(p) for p in left]
+            else:
+                lparts = self._shuffle(left, op.apply_cols[0], f"{i}:L")
+            if "R" in elide:
+                self.stats.exchanges_elided += 1
+                rparts = [concat_batches(p) for p in right]
+            else:
+                rparts = self._shuffle(right, op.apply_cols2[0], f"{i}:R")
         out: List[List[VectorList]] = [[] for _ in range(self.P)]
         for p in range(self.P):
             probed = probe_join(op, lparts[p], rparts[p])

@@ -418,7 +418,7 @@ def _pad_to(arr: np.ndarray, n_pad: int) -> np.ndarray:
     return out
 
 
-def schedule_jax_run(ir: _RunIR, arrays: Sequence
+def schedule_jax_run(ir: _RunIR, arrays: Sequence, hoist_host: bool = True
                      ) -> Tuple[Dict[int, str], Dict[int, Optional[np.dtype]]]:
     """The jax backend's static schedule for one fused run: zero-row dtype
     propagation, then each instruction assigned ``"pre"`` (host prologue),
@@ -427,7 +427,16 @@ def schedule_jax_run(ir: _RunIR, arrays: Sequence
     ``(status per slot, dtype per slot)``. Pure numpy — shared between
     :func:`_compile_jax` (which builds the kernel from it) and the static
     analyzer's fusion pass (which diagnoses the round-trips, PL402),
-    so the diagnosis can never drift from what the kernel actually does."""
+    so the diagnosis can never drift from what the kernel actually does.
+
+    ``hoist_host=True`` (the optimizer acting on PL402) then runs a
+    demotion fixpoint: any host-only instruction stranded in the epilogue
+    pins its jit-computed inputs to the host prologue (``_eval_host``
+    evaluates the same numeric ops in numpy, byte-identical under the
+    core's x64 regime), re-ordering the commuting host-only stages ahead
+    of the jitted core until the epilogue is empty — a single host→device
+    crossing instead of a round-trip. ``hoist_host=False`` yields the raw
+    schedule the analyzer reports the round-trip from."""
     probe: Dict[int, Any] = {i: np.asarray(a)[:0]
                              for i, a in enumerate(arrays)}
     dtypes: Dict[int, Optional[np.dtype]] = {
@@ -443,19 +452,38 @@ def schedule_jax_run(ir: _RunIR, arrays: Sequence
             dtypes[ins.out] = None
 
     JIT_KINDS = ("cmp", "bool", "arith")
-    status: Dict[int, str] = {i: "pre" for i in range(ir.n_inputs)}
-    for ins in ir.instrs:
-        dep_status = [status[i] for i in ins.ins]
-        jit_ok = (ins.kind in JIT_KINDS
-                  and _jaxable(dtypes[ins.out])
-                  and all(_jaxable(dtypes[i]) for i in ins.ins)
-                  and all(s in ("pre", "jit") for s in dep_status))
-        if jit_ok:
-            status[ins.out] = "jit"
-        elif any(s in ("jit", "post") for s in dep_status):
-            status[ins.out] = "post"
-        else:
-            status[ins.out] = "pre"
+    pinned: set = set()  # slots demoted to the host prologue
+
+    def assign() -> Dict[int, str]:
+        status: Dict[int, str] = {i: "pre" for i in range(ir.n_inputs)}
+        for ins in ir.instrs:
+            dep_status = [status[i] for i in ins.ins]
+            jit_ok = (ins.kind in JIT_KINDS
+                      and ins.out not in pinned
+                      and _jaxable(dtypes[ins.out])
+                      and all(_jaxable(dtypes[i]) for i in ins.ins)
+                      and all(s in ("pre", "jit") for s in dep_status))
+            if jit_ok:
+                status[ins.out] = "jit"
+            elif any(s in ("jit", "post") for s in dep_status):
+                status[ins.out] = "post"
+            else:
+                status[ins.out] = "pre"
+        return status
+
+    status = assign()
+    while hoist_host:
+        # a "post" instruction is stranded on the host behind jit-computed
+        # inputs; demote those inputs (each iteration pins at least one
+        # jit slot, so this terminates — and ends with an empty epilogue)
+        demote = set()
+        for ins in ir.instrs:
+            if status[ins.out] == "post":
+                demote |= {s for s in ins.ins if status[s] == "jit"}
+        if not demote:
+            break
+        pinned |= demote
+        status = assign()
     return status, dtypes
 
 

@@ -24,7 +24,8 @@ from repro.core.tcap import TCAPOp, TCAPProgram
 
 __all__ = ["optimize", "eliminate_redundant_applies",
            "push_filters_past_joins", "dead_column_elimination",
-           "elide_redundant_exchanges", "OptimizerReport"]
+           "elide_redundant_exchanges", "plan_exchange_elisions",
+           "OptimizerReport"]
 
 _CSEABLE = {"attAccess", "methodCall", "cmp", "bool", "arith", "const"}
 
@@ -34,12 +35,27 @@ def elide_redundant_exchanges(prog: TCAPProgram,
                               = None) -> Tuple[int, ...]:
     """AGG op indices whose shuffle the partitioning analysis proved to be
     the identity permutation (input already stable_key_hash-partitioned on
-    the key tuple) — the physical planner records them in
-    ``PhysicalPlan.agg_elide`` and executors skip the exchange. The rule
-    itself lives in the analyzer (:mod:`repro.analysis.partitioning`) so
-    the PL201 diagnostic and the optimization can never disagree."""
+    the key tuple) — see :func:`plan_exchange_elisions` for the full
+    decision the planner records."""
+    return plan_exchange_elisions(prog, join_algo_by_index)[0]
+
+
+def plan_exchange_elisions(prog: TCAPProgram,
+                           join_algo_by_index: Optional[Dict[int, str]]
+                           = None
+                           ) -> Tuple[Tuple[int, ...],
+                                      Dict[int, Tuple[str, ...]]]:
+    """Exchanges the partitioning analysis proved to be identity
+    permutations: ``(agg_indices, {join_index: elided sides})``. AGG
+    indices (PL201) land in ``PhysicalPlan.agg_elide``; join sides
+    (PL202 — "L" probe / "R" build already hash-partitioned on the join
+    key) land in ``PhysicalPlan.join_elide``; executors skip the
+    corresponding exchanges. The rule itself lives in the analyzer
+    (:mod:`repro.analysis.partitioning`) so the PL201/PL202 diagnostics
+    and the optimization can never disagree."""
     from repro.analysis.partitioning import propagate_partitioning
-    return propagate_partitioning(prog, join_algo_by_index).redundant
+    part = propagate_partitioning(prog, join_algo_by_index)
+    return part.redundant, dict(part.join_elide)
 
 
 @dataclasses.dataclass

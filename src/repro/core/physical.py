@@ -40,6 +40,12 @@ class PhysicalPlan:
     # on the key tuple, so the split+merge is the identity permutation
     # and executors skip it (byte-identical results, zero shuffle)
     agg_elide: frozenset = frozenset()
+    # hash-partition JOIN ops (keyed by id()) -> sides ("L" probe /
+    # "R" build) whose split+route exchange the analysis proved
+    # redundant (PL202): that side is already hash-partitioned on its
+    # join key, so executors concat it in place instead of shuffling
+    join_elide: Dict[int, Tuple[str, ...]] = \
+        dataclasses.field(default_factory=dict)
 
 
 def estimate_bytes(prog: TCAPProgram, list_name: str, store: PagedStore,
@@ -72,7 +78,13 @@ def estimate_bytes(prog: TCAPProgram, list_name: str, store: PagedStore,
 def plan_physical(prog: TCAPProgram, store: PagedStore,
                   broadcast_threshold: int = 2 << 30,
                   num_partitions: Optional[int] = None,
-                  elide_exchanges: bool = True) -> PhysicalPlan:
+                  elide_exchanges: bool = True,
+                  advise_joins: bool = False) -> PhysicalPlan:
+    """``advise_joins=True`` re-prices each join with planlint's
+    width-aware byte model (inferred per-column itemsize × cardinality,
+    :func:`repro.analysis.footprint.modeled_join_algo`) instead of the
+    catalog-itemsize trace alone — the decision PL203 advises — and
+    adopts its choice where the two disagree."""
     memo: Dict[str, float] = {}
     algo: Dict[int, str] = {}
     for op in prog.ops:
@@ -92,14 +104,25 @@ def plan_physical(prog: TCAPProgram, store: PagedStore,
                     choice = "hash_partition"
             algo[id(op)] = choice
 
-    elide: frozenset = frozenset()
+    if advise_joins:
+        from repro.analysis.footprint import modeled_join_algo
+        advised = modeled_join_algo(prog, store, broadcast_threshold,
+                                    num_partitions)
+        for i, op in enumerate(prog.ops):
+            if op.op == "JOIN" and i in advised:
+                algo[id(op)] = advised[i]
+
+    agg_elide: frozenset = frozenset()
+    join_elide: Dict[int, Tuple[str, ...]] = {}
     if elide_exchanges:
-        from repro.core.optimizer import elide_redundant_exchanges
+        from repro.core.optimizer import plan_exchange_elisions
         join_by_index = {i: algo.get(id(op), "hash_partition")
                          for i, op in enumerate(prog.ops) if op.op == "JOIN"}
-        elide = frozenset(id(prog.ops[i]) for i in
-                          elide_redundant_exchanges(prog, join_by_index))
-    return PhysicalPlan(algo, split_pipelines(prog), memo, agg_elide=elide)
+        aggs, joins = plan_exchange_elisions(prog, join_by_index)
+        agg_elide = frozenset(id(prog.ops[i]) for i in aggs)
+        join_elide = {id(prog.ops[i]): sides for i, sides in joins.items()}
+    return PhysicalPlan(algo, split_pipelines(prog), memo,
+                        agg_elide=agg_elide, join_elide=join_elide)
 
 
 def split_pipelines(prog: TCAPProgram) -> List[List[TCAPOp]]:
@@ -128,15 +151,21 @@ def plan_to_wire(prog: TCAPProgram, plan: PhysicalPlan) -> Dict:
             for i, op in enumerate(prog.ops) if op.op == "JOIN"}
     elide = sorted(i for i, op in enumerate(prog.ops)
                    if id(op) in plan.agg_elide)
+    join_elide = {i: tuple(plan.join_elide[id(op)])
+                  for i, op in enumerate(prog.ops)
+                  if id(op) in plan.join_elide}
     return {"join_algo": algo, "estimates": dict(plan.estimates),
-            "agg_elide": elide}
+            "agg_elide": elide, "join_elide": join_elide}
 
 
 def plan_from_wire(prog: TCAPProgram, wire: Dict) -> PhysicalPlan:
     """Rebuild a :class:`PhysicalPlan` against this process's copy of
-    ``prog`` (the one the ops' ids refer to)."""
+    ``prog`` (the one the ops' ids refer to). Elision keys default to
+    empty so plans shipped by older peers still load."""
     return PhysicalPlan(
         {id(prog.ops[i]): a for i, a in wire["join_algo"].items()},
         split_pipelines(prog), dict(wire["estimates"]),
         agg_elide=frozenset(id(prog.ops[i])
-                            for i in wire.get("agg_elide", ())))
+                            for i in wire.get("agg_elide", ())),
+        join_elide={id(prog.ops[i]): tuple(sides) for i, sides in
+                    wire.get("join_elide", {}).items()})

@@ -34,6 +34,7 @@ Kernels:
 """
 from __future__ import annotations
 
+import struct
 import threading
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -56,6 +57,9 @@ _FNV_PRIME = 0x100000001b3
 _U64 = (1 << 64) - 1
 
 
+_SPLITMIX_PRIME = 0xFF51AFD7ED558CCD  # == np.int64(-49064778989728563)
+
+
 def _fnv1a(data: bytes) -> int:
     """FNV-1a 64-bit, folded into int64 range."""
     h = _FNV_OFFSET
@@ -64,14 +68,44 @@ def _fnv1a(data: bytes) -> int:
     return h - (1 << 64) if h >= (1 << 63) else h
 
 
+def _asr64(u: int, s: int) -> int:
+    """Arithmetic shift right of a 64-bit two's-complement pattern held
+    in an unsigned Python int (sign bit replicates, as numpy ``>>`` on
+    int64 does)."""
+    if u & (1 << 63):
+        return ((u >> s) | ((_U64 << (64 - s)) & _U64)) & _U64
+    return u >> s
+
+
+def _splitmix64(u: int) -> int:
+    """Scalar twin of :func:`hash_col`'s int64 mix — bit-identical to
+    ``(x ^ (x >> 33)) * prime; x ^ (x >> 29)`` in wrapping int64
+    arithmetic, folded into int64 range."""
+    u &= _U64
+    u = ((u ^ _asr64(u, 33)) * _SPLITMIX_PRIME) & _U64
+    u ^= _asr64(u, 29)
+    return u - (1 << 64) if u >= (1 << 63) else u
+
+
 def stable_key_hash(k) -> int:
-    """``hash()``, except process-independent for str/bytes (and tuples
-    containing them): Python salts built-in str/bytes hashing per process
-    (PYTHONHASHSEED), which would route the same key to different
-    destinations on independent worker processes — silently splitting
-    groups and losing join matches under the socket transport's
-    connect mode. int/float/bool hashing is already unsalted and keeps
-    the built-in path."""
+    """Process-independent scalar key hash, bit-identical per element to
+    the vectorized :func:`hash_col` on a column of the same keys. Two
+    properties hang off this:
+
+    * Python salts built-in str/bytes hashing per process
+      (PYTHONHASHSEED), which would route the same key to different
+      destinations on independent worker processes — silently splitting
+      groups and losing join matches under the socket transport's
+      connect mode. Hence FNV-1a for bytes/str.
+    * planlint's partitioning pass (PL201/PL202) elides exchanges when a
+      stream is already placed by an equivalent routing: the AGG family
+      routes by this function while the JOIN family routes by
+      ``hash_col``, so the two must be the *same* hash or co-partitioned
+      facts could never survive a hash-partition JOIN. int/bool take the
+      splitmix64-style mix; floats hash their float64 bit pattern with
+      ``-0.0`` normalized to ``+0.0`` (matching ``hash_col``) so equal
+      keys co-route.
+    """
     if isinstance(k, tuple):
         h = _FNV_OFFSET
         for item in k:
@@ -81,6 +115,13 @@ def stable_key_hash(k) -> int:
         return _fnv1a(k)
     if isinstance(k, str):    # np.str_ is a str subclass
         return _fnv1a(k.encode("utf-8", "surrogatepass"))
+    if isinstance(k, (bool, np.bool_)) or isinstance(k, (int, np.integer)):
+        return _splitmix64(int(k))
+    if isinstance(k, (float, np.floating)):
+        # the float64 bit pattern, with -0.0 -> +0.0 (hash_col adds 0.0
+        # for the same normalization); NaNs hash by payload bits
+        bits = struct.unpack("=q", struct.pack("=d", float(k) + 0.0))[0]
+        return _splitmix64(bits)
     return hash(k)
 
 
@@ -93,8 +134,9 @@ def hash_col(col: np.ndarray) -> np.ndarray:
         x = (x ^ (x >> 33)) * np.int64(-49064778989728563)  # splitmix64-ish
         return x ^ (x >> 29)
     if col.dtype.kind == "f":
-        return hash_col(col.view(np.int64) if col.dtype.itemsize == 8
-                        else col.astype(np.float64).view(np.int64))
+        # + 0.0 normalizes -0.0 to +0.0 before taking bits, so equal
+        # float keys co-route (and match stable_key_hash's scalar path)
+        return hash_col((col.astype(np.float64) + 0.0).view(np.int64))
     if col.dtype.kind == "S" and len(col):
         return _fnv1a_bytes_col(col)
     return np.fromiter((stable_key_hash(x) for x in col.tolist()),

@@ -102,6 +102,7 @@ class Session:
                  plan_cache_size: int = 64,
                  expr_backend: str = "numpy",
                  elide_exchanges: bool = True,
+                 advise_joins: bool = False,
                  trace: bool = False,
                  service=None):
         if backend == "service" and service is not None:
@@ -124,6 +125,10 @@ class Session:
         self.backend = backend
         self.expr_backend = expr_backend
         self.elide_exchanges = elide_exchanges
+        # advise_joins=True: let planlint's width-aware byte model (the
+        # PL203 cross-check) override the catalog-itemsize broadcast-vs-
+        # hash decision in plan_physical
+        self.advise_joins = advise_joins
         # query tracing: per-query span recording through plan, executor,
         # kernels, and (workers backend) every rank — `Session(trace=True)`
         # or REPRO_TRACE=1. Off by default: every instrumentation site then
@@ -322,7 +327,8 @@ class Session:
         entry.physical = plan_physical(
             entry.optimized, self.store, self.executor.broadcast_threshold,
             num_partitions=self.executor.P,
-            elide_exchanges=self.elide_exchanges)
+            elide_exchanges=self.elide_exchanges,
+            advise_joins=self.advise_joins)
         entry.stats_version = ver
         entry.analysis = None  # join algos / elisions may have changed
         return entry.physical
@@ -334,7 +340,9 @@ class Session:
             from repro.analysis import analyze
             entry.analysis = analyze(
                 entry.optimized, store=self.store, plan=plan,
-                config=self._build_config, expr_backend=self.expr_backend)
+                config=self._build_config, expr_backend=self.expr_backend,
+                broadcast_threshold=self.executor.broadcast_threshold,
+                num_partitions=self.executor.P)
         return entry.analysis
 
     def _check(self, ds: Dataset):
@@ -346,10 +354,14 @@ class Session:
             plan = plan_physical(
                 prog, self.store, self.executor.broadcast_threshold,
                 num_partitions=self.executor.P,
-                elide_exchanges=self.elide_exchanges)
+                elide_exchanges=self.elide_exchanges,
+                advise_joins=self.advise_joins)
             return analyze(prog, store=self.store, plan=plan,
                            config=self._build_config,
-                           expr_backend=self.expr_backend)
+                           expr_backend=self.expr_backend,
+                           broadcast_threshold=(
+                               self.executor.broadcast_threshold),
+                           num_partitions=self.executor.P)
         entry = self._entry_for(ds)
         return self._analysis_for(entry, self._physical_for(entry))
 
@@ -485,7 +497,8 @@ class Session:
             plan = plan_physical(prog, self.store,
                                  self.executor.broadcast_threshold,
                                  num_partitions=self.executor.P,
-                                 elide_exchanges=self.elide_exchanges)
+                                 elide_exchanges=self.elide_exchanges,
+                                 advise_joins=self.advise_joins)
         if self.backend == "workers":
             backend = (f"workers x{self.executor.P} "
                        f"via {self.executor.worker_kind}")
@@ -514,6 +527,14 @@ class Session:
                     est = plan.estimates.get(op.in_list2, 0.0)
                     lines.append(f"    join: {algo} "
                                  f"(build side ~{est:,.0f} bytes)")
+                    sides = plan.join_elide.get(id(op), ())
+                    if sides:
+                        named = {"L": "probe", "R": "build"}
+                        lines.append(
+                            "    join: exchange elided on "
+                            + " and ".join(named[s] for s in sides)
+                            + " side (already hash-partitioned on the "
+                            "join key)")
                 elif op.op == "AGG" and id(op) in plan.agg_elide:
                     lines.append("    agg: exchange elided (input already "
                                  "hash-partitioned on the key)")
@@ -522,7 +543,10 @@ class Session:
                 from repro.analysis import analyze
                 analysis = analyze(prog, store=self.store, plan=plan,
                                    config=self._build_config,
-                                   expr_backend=self.expr_backend)
+                                   expr_backend=self.expr_backend,
+                                   broadcast_threshold=(
+                                       self.executor.broadcast_threshold),
+                                   num_partitions=self.executor.P)
             lines.append(analysis.format())
         if analyzed is not None:
             lines.append(analyzed)

@@ -191,6 +191,8 @@ class DistributedExecutor:
                     agg.broadcast_joins += 1
                 else:
                     agg.hash_partition_joins += 1
+                    agg.exchanges_elided += len(
+                        plan.join_elide.get(id(op), ()))
             elif op.op == "AGG" and id(op) in plan.agg_elide:
                 agg.exchanges_elided += 1
 

@@ -109,8 +109,9 @@ class WorkerRuntime:
                     data[op.out] = [kern(vl) for vl in data[op.in_list]]
                 elif op.op == "JOIN":
                     algo = plan.join_algo.get(id(op), "hash_partition")
-                    data[op.out] = self._join(op, i, data[op.in_list],
-                                              data[op.in_list2], algo)
+                    data[op.out] = self._join(
+                        op, i, data[op.in_list], data[op.in_list2], algo,
+                        elide=plan.join_elide.get(id(op), ()))
                 elif op.op == "AGG":
                     data[op.out] = self._aggregate(
                         op, i, data[op.in_list],
@@ -140,7 +141,8 @@ class WorkerRuntime:
         return batches
 
     def _join(self, op: TCAPOp, i: int, left: List[VectorList],
-              right: List[VectorList], algo: str) -> List[VectorList]:
+              right: List[VectorList], algo: str,
+              elide: Tuple[str, ...] = ()) -> List[VectorList]:
         if algo == "broadcast":
             self.stats.broadcast_joins += 1
             srcs = all_gather(self.tr, self.P, f"{i}:build", right,
@@ -149,8 +151,22 @@ class WorkerRuntime:
             lvl = concat_batches(left)
         else:
             self.stats.hash_partition_joins += 1
-            lvl = self._shuffle_side(op.apply_cols[0], f"{i}:L", left)
-            rvl = self._shuffle_side(op.apply_cols2[0], f"{i}:R", right)
+            # an elided side was proven already hash-partitioned on its
+            # join key (PL202): every row routes back to this rank, every
+            # peer's split toward us is empty — the exchange is the
+            # identity permutation. All ranks take the branch together
+            # (join_elide ships with the wire plan), so no rank blocks
+            # in recv.
+            if "L" in elide:
+                self.stats.exchanges_elided += 1
+                lvl = concat_batches(left)
+            else:
+                lvl = self._shuffle_side(op.apply_cols[0], f"{i}:L", left)
+            if "R" in elide:
+                self.stats.exchanges_elided += 1
+                rvl = concat_batches(right)
+            else:
+                rvl = self._shuffle_side(op.apply_cols2[0], f"{i}:R", right)
         probed = probe_join(op, lvl, rvl)
         if probed is None:
             return []

@@ -105,6 +105,33 @@ def test_pl103_unresolved_column_gates_collect():
     assert "PL103" in ds.explain(diagnostics=True)
 
 
+def test_pl104_float_group_key_warns():
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows(), ARow)
+              .group_by("x").agg(n=agg.count()))
+    pl104 = [d for d in ds.check().diagnostics if d.code == "PL104"]
+    assert pl104 and pl104[0].severity == "warning"
+    assert "NaN" in pl104[0].message
+    ds.collect()  # warnings never gate
+    # integer and bytes keys never warn
+    ok = (sess.load("t", _rows(), ARow)
+              .group_by("k", "big").agg(n=agg.count()))
+    assert "PL104" not in _codes(ok.check())
+
+
+def test_pl104_suppressed_on_tainted_key():
+    """A native-lambda key probes to float64 on zero rows, but its real
+    runtime dtype is unknowable — taint must suppress the warning."""
+    sess = Session(num_partitions=2)
+    ds = (sess.load("t", _rows(), ARow)
+              .aggregate(key=lambda a: make_lambda(
+                  a, lambda r: np.asarray(r["x"], np.float64), "fkey"),
+                  value=lambda a: make_lambda(
+                  a, lambda r: np.ones_like(r["x"]), "ones")))
+    assert "PL104" not in _codes(ds.check())
+    ds.collect()
+
+
 def test_native_lambda_taint_suppresses_diagnostics():
     """A column derived through a native lambda may have any dtype at
     runtime — the analyzer must never gate or warn on it (even though the
@@ -169,18 +196,197 @@ def test_rekeyed_aggregation_is_not_elided():
     ds.collect()
 
 
-def test_join_kills_partitioning_fact():
-    """A hash-partition join re-routes rows by a different hash family —
-    a downstream same-key AGG must not be elided."""
-    sess = Session(num_partitions=3,
-                   broadcast_threshold_bytes=0)  # force hash_partition
+# ------------------------------------------- join elision / PL202, PL203
+class EmpJ(Record):
+    dept: i64
+    salary: i64
+
+
+class DepJ(Record):
+    deptkey: i64
+    rank: i64
+
+
+def _emp_rows(n=240, seed=5):
+    rng = np.random.default_rng(seed)
+    return EmpJ.pack(dept=rng.integers(0, 6, n),
+                    salary=rng.integers(1, 9, n))
+
+
+def _dep_rows(seed=6):
+    rng = np.random.default_rng(seed)
+    return DepJ.pack(deptkey=np.arange(6), rank=rng.integers(0, 100, 6))
+
+
+def _join_chain(sess, erecs, drecs):
+    """AGG → JOIN (on the group key, default pair projection) → AGG: the
+    co-partitioned shape where both the probe-side join shuffle and the
+    downstream AGG shuffle are identity permutations."""
+    e = (sess.load("e", erecs, EmpJ)
+             .group_by("dept").agg(total=agg.sum("salary"), n=agg.count()))
+    d = sess.load("d", drecs, DepJ)
+    return (e.join(d, on=lambda a, b: a.dept == b.deptkey)
+             .group_by("dept").agg(s=agg.sum("total"), r=agg.max("rank")))
+
+
+def test_pl202_copartitioned_join_agg_elides_byte_identical():
+    erecs, drecs = _emp_rows(), _dep_rows()
+    on = Session(num_partitions=3,
+                 broadcast_threshold_bytes=0)  # force hash_partition
+    off = Session(num_partitions=3, broadcast_threshold_bytes=0,
+                  elide_exchanges=False)
+    q_on = _join_chain(on, erecs, drecs)
+    q_off = _join_chain(off, erecs, drecs)
+
+    rep = q_on.check()
+    assert {"PL201", "PL202"} <= _codes(rep)
+    pl202 = [d for d in rep.diagnostics if d.code == "PL202"]
+    assert pl202[0].severity == "info" and "probe" in pl202[0].message
+    # the probe-side join shuffle AND the downstream AGG shuffle
+    assert len(rep.elided_exchanges) == 2
+    # findings state the fact either way; the action is plan-dependent
+    assert {"PL201", "PL202"} <= _codes(q_off.check())
+    assert not q_off.check().elided_exchanges
+
+    r_on, r_off = q_on.collect(), q_off.collect()
+    for c in r_off:
+        assert r_on[c].tobytes() == r_off[c].tobytes(), c
+    assert on.last_stats.exchanges_elided == 2
+    assert off.last_stats.exchanges_elided == 0
+    assert on.last_stats.shuffle_bytes < off.last_stats.shuffle_bytes
+    assert "join: exchange elided on probe side" in q_on.explain()
+    assert "agg: exchange elided" in q_on.explain()
+    assert "exchange elided" not in q_off.explain()
+
+
+def test_pl202_rekeyed_join_is_not_elided():
+    """Joining the aggregate on a key other than its group key must
+    shuffle both sides — the live fact does not match the join key."""
+    sess = Session(num_partitions=3, broadcast_threshold_bytes=0)
     recs = _rows(300, seed=3)
     agged = (sess.load("g", recs, ARow)
-                 .group_by("k").agg(s=agg.sum("x")))
+                 .group_by("k").agg(s=agg.sum("x"), n=agg.count()))
+    other = sess.load("o", recs, ARow)
+    joined = agged.join(other, on=lambda a, b: a.n == b.big,
+                        project=lambda a, b: a.s * b.x)
+    rep = joined.check()
+    assert "PL202" not in _codes(rep)
+    assert not rep.elided_exchanges
+    joined.collect()
+
+
+def test_pl202_multikey_fact_does_not_match_single_key_join():
+    """A two-key group fact is placement by the *pair* hash — a join
+    routing on one of those keys alone is a different hash family and
+    must still shuffle."""
+    sess = Session(num_partitions=3, broadcast_threshold_bytes=0)
+    recs = _rows(300, seed=4)
+    agged = (sess.load("g", recs, ARow)
+                 .group_by("k", "small").agg(s=agg.sum("x")))
     other = sess.load("o", recs, ARow)
     joined = agged.join(other, on=lambda a, b: a.k == b.k,
-                        project=lambda a, b: a.s * b.x)
-    assert not joined.check().elided_exchanges
+                        project=lambda a, b: a.s + b.x)
+    rep = joined.check()
+    assert "PL202" not in _codes(rep)
+    assert not rep.elided_exchanges
+    joined.collect()
+
+
+def test_probe_fact_survives_broadcast_join():
+    """A broadcast join leaves probe rows in place: the probe fact flows
+    through the default pair projection and the downstream same-key AGG
+    elides — with no PL202, since a broadcast join has no shuffle."""
+    sess = Session(num_partitions=3)  # tiny build side -> broadcast
+    q = _join_chain(sess, _emp_rows(), _dep_rows())
+    rep = q.check()
+    assert "PL202" not in _codes(rep)
+    assert "PL201" in _codes(rep)
+    assert len(rep.elided_exchanges) == 1
+    q.collect()
+    assert sess.last_stats.exchanges_elided == 1
+
+
+class ProbeRow(Record):
+    pk: i64
+    pad: S(200)
+    pv: f64
+
+
+def test_pl203_join_advisory_and_advise_joins_flip():
+    """The planner's catalog-itemsize trace prices an aggregated build
+    side at 10% of the *wide* scanned bytes; the width-aware model sees
+    the aggregation narrow the stream. Pick a threshold between the two
+    estimates: the default plan hash-partitions, PL203 advises broadcast,
+    and advise_joins adopts the modeled choice."""
+    rng = np.random.default_rng(9)
+    n = 200
+    precs = ProbeRow.pack(pk=rng.integers(0, 5, n),
+                          pad=np.full(n, b"p"),
+                          pv=rng.normal(0, 1, n))
+    brecs = ProbeRow.pack(pk=rng.integers(0, 5, n),
+                          pad=np.full(n, b"q"),
+                          pv=rng.normal(0, 1, n))
+
+    def build(sess):
+        probe = sess.load("w", precs, ProbeRow)
+        narrow = (sess.load("w2", brecs, ProbeRow)
+                      .group_by("pk").agg(s=agg.sum("pv")))
+        return probe.join(narrow, on=lambda a, b: a.pk == b.pk)
+
+    # planner estimate: 0.1 * 200 rows * 216 B = 4320; model: ~20 rows of
+    # the narrowed (pk, s) stream = well under 2048
+    plain = Session(num_partitions=3, broadcast_threshold_bytes=2048)
+    q = build(plain)
+    pl203 = [d for d in q.check().diagnostics if d.code == "PL203"]
+    assert pl203 and pl203[0].severity == "info"
+    assert "broadcast" in pl203[0].message
+    assert "join: hash_partition" in q.explain()
+    r_plain = q.collect()
+
+    advised = Session(num_partitions=3, broadcast_threshold_bytes=2048,
+                      advise_joins=True)
+    q2 = build(advised)
+    assert "PL203" not in _codes(q2.check())  # plan now agrees with model
+    assert "join: broadcast" in q2.explain()
+    r_adv = q2.collect()
+
+    # same multiset of rows (one structured pair column); the two
+    # algorithms order partitions differently, so compare under a total
+    # row order
+    (a,), (b,) = r_plain.values(), r_adv.values()
+    assert len(a) == n and len(b) == n
+    o1 = np.lexsort((a["pv"], a["pk"]))
+    o2 = np.lexsort((b["pv"], b["pk"]))
+    assert a[o1].tobytes() == b[o2].tobytes()
+
+
+def test_footprint_counts_broadcast_build_replication():
+    """Satellite: a broadcast build side is resident on every worker —
+    the footprint must charge all P copies in the total and the (P-1)/P
+    extra per worker, and charge nothing extra at P=1."""
+    from repro.analysis.footprint import estimate_plan_footprint
+    from repro.core.optimizer import optimize
+    from repro.core.physical import plan_physical
+    P = 4
+    sess = Session(num_partitions=P)
+    e = sess.load("e", _emp_rows(), EmpJ)
+    d = sess.load("d", _dep_rows(), DepJ)
+    q = e.join(d, on=lambda a, b: a.dept == b.deptkey)
+    prog, _ = optimize(sess._compile(q))
+    plan = plan_physical(prog, sess.store, num_partitions=P)
+    join_op = next(op for op in prog.ops if op.op == "JOIN")
+    assert plan.join_algo[id(join_op)] == "broadcast"
+
+    fp1 = estimate_plan_footprint(prog, sess.store, plan, num_partitions=1)
+    fpP = estimate_plan_footprint(prog, sess.store, plan, num_partitions=P)
+    base = sum(fp1.per_list_bytes.values())
+    build = fp1.per_list_bytes[join_op.in_list2]
+    assert build > 0
+    assert fp1.total_bytes == pytest.approx(base)  # P=1: no replication
+    assert fp1.per_worker_bytes == pytest.approx(base)
+    assert fpP.total_bytes == pytest.approx(base + (P - 1) * build)
+    assert fpP.per_worker_bytes == pytest.approx(
+        base / P + (P - 1) / P * build)
 
 
 def test_elision_parity_on_workers_backend():
@@ -319,9 +525,31 @@ def test_pl402_host_device_roundtrip_on_jax():
     pl402 = [d for d in rep.diagnostics if d.code == "PL402"]
     assert pl402 and pl402[0].severity == "info"
     assert "round-trip" in pl402[0].message
+    # the finding reports the action the scheduler takes on it
+    assert "demoting" in pl402[0].message
     # numpy fuses the same run with no device boundary to cross
     assert not any(d.code == "PL402"
                    for d in analyze(prog, expr_backend="numpy").diagnostics)
+
+
+def test_pl402_hoist_empties_device_epilogue():
+    """The acted-on form: with hoisting the schedule has no post-core
+    host instructions left — every host-only stage runs in the prologue
+    and the run crosses the device boundary exactly once."""
+    from repro.core.exprc import FusedStage, build_steps, schedule_jax_run
+    prog = _hash_after_arith_prog()
+    fused = [s for s in build_steps(prog, "jax")
+             if isinstance(s, FusedStage)]
+    assert fused
+    ir = fused[0].ir
+    arrays = [np.zeros(0, _rows().dtype) for _ in ir.in_cols]
+    raw, _ = schedule_jax_run(ir, arrays, hoist_host=False)
+    hoisted, _ = schedule_jax_run(ir, arrays, hoist_host=True)
+    assert any(s == "post" for s in raw.values())
+    assert not any(s == "post" for s in hoisted.values())
+    # the hoisted schedule still jits something — the arith core shrinks
+    # but does not disappear wholesale unless every instr is host-pinned
+    assert any(s == "jit" for s in raw.values())
 
 
 # ----------------------------------------------------- report plumbing
@@ -340,6 +568,22 @@ def test_report_format_and_ordering():
     clean = Session(num_partitions=2).load("t", _rows(), ARow)
     clean_rep = clean.select(lambda t: t.x).check()
     assert "(clean)" in clean_rep.format()
+
+
+def test_report_to_json_dict_is_serializable():
+    """The machine-readable view behind ``python -m repro.analysis
+    --json``: plain JSON types only, findings/counts/elisions present."""
+    import json
+    sess = Session(num_partitions=3)
+    doc = _chained(sess, _rows()).check().to_json_dict()
+    json.dumps(doc)  # raises on anything non-serializable
+    assert any(f["code"] == "PL201" for f in doc["findings"])
+    assert all({"code", "severity", "op_path", "message"} <= set(f)
+               for f in doc["findings"])
+    assert doc["elided_exchanges"]
+    assert doc["counts"]["info"] >= 1
+    assert all(v is None or isinstance(v, str)
+               for v in doc["output_schema"].values())
 
 
 def test_check_is_cached_with_the_plan():

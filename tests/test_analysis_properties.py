@@ -14,6 +14,12 @@ from exprc_trees import build_term  # noqa: E402
 from test_analysis import assert_inferred_schema_matches  # noqa: E402
 from test_exprc import BACKENDS, TRow, _rows  # noqa: E402
 from repro.core import Session, agg  # noqa: E402
+from repro.objectmodel.schema import Record, f64, i64  # noqa: E402
+
+
+class DimRow(Record):
+    dkey: i64
+    w: f64
 
 _COLS = st.sampled_from([("col", "a"), ("col", "b"), ("col", "c")])
 _CONSTS = st.one_of(
@@ -99,3 +105,39 @@ def test_chained_aggregation_elision_is_byte_identical(
     assert set(r_on) == set(r_off)
     for c in r_off:
         assert r_on[c].tobytes() == r_off[c].tobytes(), c
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.sampled_from(BACKENDS),
+       st.integers(0, 2 ** 31 - 1), st.integers(1, 150),
+       st.integers(2, 3))
+def test_join_elision_is_byte_identical(be, seed, n, parts):
+    """A co-partitioned AGG → JOIN → AGG chain under forced hash
+    partitioning: the elided plan (no probe-side join shuffle, no second
+    AGG exchange) agrees byte-for-byte with the full-shuffle plan, on the
+    local executor and on in-process workers, for every expr backend."""
+    recs = _rows(n, seed)
+    dims = DimRow.pack(dkey=np.arange(-100, 100),
+                       w=np.random.default_rng(seed).normal(0, 1, 200))
+    configs = [dict(num_partitions=parts),
+               dict(num_partitions=parts, elide_exchanges=False),
+               dict(backend="workers", num_workers=parts,
+                    worker_kind="thread")]
+    results = []
+    for kw in configs:
+        sess = Session(expr_backend=be, broadcast_threshold_bytes=0, **kw)
+        ds = (sess.load("t", recs, TRow)
+                  .group_by("a").agg(s=agg.sum("c"), k=agg.count())
+                  .join(sess.load("d", dims, DimRow),
+                        on=lambda a, b: a.a == b.dkey)
+                  .group_by("a").agg(t=agg.sum("s"), m=agg.max("w")))
+        rep = ds.check()
+        expect = 0 if kw.get("elide_exchanges") is False else 2
+        assert len(rep.elided_exchanges) == expect
+        with np.errstate(all="ignore"):
+            results.append(ds.collect())
+    ref = results[0]
+    for other in results[1:]:
+        assert set(ref) == set(other)
+        for c in ref:
+            assert ref[c].tobytes() == other[c].tobytes(), c

@@ -19,6 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import Session, agg, make_lambda
+from repro.objectmodel.schema import Record, S, i64
 
 EMP_DT = np.dtype([("ename", "S8"), ("dept", np.int64),
                    ("salary", np.int64)])
@@ -405,5 +406,73 @@ def test_elision_chain_workers_equivalence(worker_kind):
     emps, _ = _emps()
     unelided = _regrouped(off.load("emps", emps, type_name="Emp")).collect()
     _assert_bytes_equal(workers, unelided)
+    assert all(st.exchanges_elided == 0
+               for st in off.executor.worker_stats)
+
+
+# typed schemas for the join-elision chain: the default pair projection
+# (whose per-field provenance threads partitioning facts through the
+# join) needs record classes on both sides
+class EmpR(Record):
+    ename: S(8)
+    dept: i64
+    salary: i64
+
+
+class DepR(Record):
+    deptkey: i64
+    rank: i64
+
+
+def _join_regrouped(e, d):
+    """AGG → JOIN on the group key (default pair projection) → AGG: under
+    forced hash partitioning the probe-side join shuffle and the second
+    AGG exchange are both identity permutations; the planner elides both
+    and the chain pays zero re-shuffles after the first aggregation."""
+    return (e.group_by("dept").agg(total=agg.sum("salary"), n=agg.count())
+             .join(d, on=lambda a, b: a.dept == b.deptkey)
+             .group_by("dept").agg(t=agg.sum("total"), r=agg.max("rank")))
+
+
+def test_join_elision_chain_local_shuffle_drop_and_byte_identity():
+    emps, deps = _emps()
+    on = Session(num_partitions=3, broadcast_threshold_bytes=0)
+    off = Session(num_partitions=3, broadcast_threshold_bytes=0,
+                  elide_exchanges=False)
+    q_on = _join_regrouped(on.load("emps", emps, EmpR),
+                           on.load("deps", deps, DepR))
+    q_off = _join_regrouped(off.load("emps", emps, EmpR),
+                            off.load("deps", deps, DepR))
+    _assert_bytes_equal(q_on.collect(), q_off.collect())
+    assert on.last_stats.exchanges_elided == 2
+    assert off.last_stats.exchanges_elided == 0
+    assert on.last_stats.shuffle_bytes < off.last_stats.shuffle_bytes
+    assert "join: exchange elided on probe side" in q_on.explain()
+    assert "agg: exchange elided" in q_on.explain()
+    assert "exchange elided" not in q_off.explain()
+
+
+@pytest.mark.parametrize("worker_kind", TRANSPORTS)
+def test_join_elision_chain_workers_equivalence(worker_kind):
+    """The co-partitioned JOIN→AGG chain on the distributed runtime:
+    byte-identical to the local simulation and to the unelided plan on
+    every transport, every rank skipping both exchanges in lockstep."""
+    kw = transport_kw(worker_kind)
+    emps, deps = _emps()
+
+    def build(sess):
+        return _join_regrouped(sess.load("emps", emps, EmpR),
+                               sess.load("deps", deps, DepR))
+
+    local = Session(num_partitions=3, broadcast_threshold_bytes=0)
+    on = Session(backend="workers", num_workers=3,
+                 broadcast_threshold_bytes=0, **kw)
+    r_local, r_on = build(local).collect(), build(on).collect()
+    _assert_bytes_equal(r_local, r_on)
+    assert all(st.exchanges_elided == 2
+               for st in on.executor.worker_stats)
+    off = Session(backend="workers", num_workers=3,
+                  broadcast_threshold_bytes=0, elide_exchanges=False, **kw)
+    _assert_bytes_equal(r_on, build(off).collect())
     assert all(st.exchanges_elided == 0
                for st in off.executor.worker_stats)
